@@ -1,0 +1,117 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+Prints ``name,params,us_per_call,derived`` CSV rows.
+
+  fw_table1        — the paper's Table 1 implementation ladder
+  fw_scaling       — the paper's Figure 7 growth curve (time vs n³ fit)
+  dist_fw          — multi-pod distributed FW (subprocess, host devices)
+  kernel_sweep     — staged phase-3 kernel parameter sweep (interpret
+                     correctness + VMEM-footprint arithmetic; see
+                     EXPERIMENTS.md §Perf for the roofline-side analysis)
+
+Run: PYTHONPATH=src python -m benchmarks.run [table ...]
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import fw_table1
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_fw_table1():
+    rows = []
+    for name, n, sec, tps in fw_table1.run():
+        rows.append((name, f"n={n}", sec * 1e6, f"{tps/1e9:.3f}Gtasks/s"))
+    return rows
+
+
+def bench_fw_scaling():
+    """Fit t = c·n³ (the paper reports c ≈ 1.2e-11 s for its CPU)."""
+    rows = []
+    ns, ts = [], []
+    for n in (256, 512, 1024):
+        w = jnp.asarray(fw_table1.random_digraph(n, seed=n))
+        t = fw_table1._time(fw_table1.fw_blocked, w, block_size=min(128, n))
+        ns.append(n)
+        ts.append(t)
+        rows.append(("fw_scaling/blocked", f"n={n}", t * 1e6, f"{n**3/t/1e9:.2f}Gtasks/s"))
+    c = float(np.mean([t / n**3 for n, t in zip(ns, ts)]))
+    rows.append(("fw_scaling/implied_constant", "t=c*n^3", c * 1e6, f"c={c:.3e}s"))
+    return rows
+
+
+def bench_dist_fw():
+    """Distributed FW wall time on 8 host devices (absolute numbers are
+    host-CPU; the derived column is comm volume per the SUMMA bound)."""
+    rows = []
+    for ndev, n, bs in ((8, 512, 64),):
+        t0 = time.perf_counter()
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        res = subprocess.run(
+            [sys.executable, "-m", "repro.launch.fw_dist_check",
+             "--devices", str(ndev), "--n", str(n), "--bs", str(bs)],
+            capture_output=True, text=True, timeout=600, env=env, cwd=REPO,
+        )
+        dt = time.perf_counter() - t0
+        ok = "OK" if res.returncode == 0 else "FAIL"
+        # SUMMA comm bound: n^2 (1/R + 1/C) words.
+        R, C = ndev // 2, 2
+        comm = n * n * (1 / R + 1 / C) * 4
+        rows.append((f"dist_fw/{ok}", f"ndev={ndev},n={n}", dt * 1e6,
+                     f"comm={comm/1e6:.2f}MB"))
+    return rows
+
+
+def bench_kernel_sweep():
+    """Staged kernel: correctness across staging depths + VMEM footprint."""
+    from repro.kernels.minplus_matmul import semiring_matmul
+    from repro.kernels.ref import semiring_matmul_ref
+
+    rows = []
+    n = 256
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0, 10, (n, n)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(0, 10, (n, n)).astype(np.float32))
+    want = np.asarray(semiring_matmul_ref(a, b))
+    for bk in (8, 16, 32, 64, 128):
+        t0 = time.perf_counter()
+        got = semiring_matmul(a, b, bm=128, bn=128, bk=bk, interpret=True)
+        jax.block_until_ready(got)
+        dt = time.perf_counter() - t0
+        ok = np.allclose(np.asarray(got), want)
+        # fp32 VMEM per grid step: C + 2-stage-buffered A,B slices.
+        vmem = (128 * 128 + 2 * (128 * bk + bk * 128)) * 4
+        rows.append((f"kernel_sweep/bk{bk}_{'ok' if ok else 'MISMATCH'}",
+                     f"bm=bn=128,bk={bk}", dt * 1e6, f"vmem={vmem/1024:.0f}KB"))
+    return rows
+
+
+TABLES = {
+    "fw_table1": bench_fw_table1,
+    "fw_scaling": bench_fw_scaling,
+    "dist_fw": bench_dist_fw,
+    "kernel_sweep": bench_kernel_sweep,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    print("name,params,us_per_call,derived")
+    for t in which:
+        for name, params, us, derived in TABLES[t]():
+            print(f"{name},{params},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Multi-device distributed Floyd-Warshall with round-granular fault
+tolerance (run this file directly — it forces 8 host devices).
+
+    PYTHONPATH=src python examples/distributed_fw.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fw_naive
+from repro.core.distributed import fw_distributed
+from repro.core.graph import random_digraph
+from repro.launch.mesh import make_host_mesh
+
+def main():
+    n, bs = 512, 64
+    mesh = make_host_mesh(8)
+    print(f"mesh: {dict(mesh.shape)}")
+    w = random_digraph(n, density=0.2, seed=7)
+
+    saved = {}
+
+    def checkpoint_cb(next_round, wl):
+        # A real deployment writes through train/checkpoint.py; any round
+        # boundary is consistent and re-running a round is idempotent.
+        saved[next_round] = np.asarray(jax.device_get(wl))
+
+    d = fw_distributed(
+        w, mesh, block_size=bs, rounds_per_call=2, checkpoint_cb=checkpoint_cb
+    )
+    d = np.asarray(jax.device_get(d))
+    want = np.asarray(fw_naive(jnp.asarray(w)))
+    np.testing.assert_allclose(d, want, rtol=1e-5, atol=1e-5)
+    print(f"distributed FW over {len(jax.devices())} devices ✓ "
+          f"(checkpoints at rounds {sorted(saved)})")
+
+    # Simulated node failure after round 4: restart from the checkpoint.
+    d2 = fw_distributed(saved[4], mesh, block_size=bs, start_round=4)
+    np.testing.assert_allclose(np.asarray(jax.device_get(d2)), want,
+                               rtol=1e-5, atol=1e-5)
+    print("restart from round-4 checkpoint reproduces the result ✓")
+
+if __name__ == "__main__":
+    main()

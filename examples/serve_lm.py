@@ -1,0 +1,32 @@
+"""Batched serving example: prefill + lockstep decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models.model import init_params
+from repro.serve.engine import Engine
+
+def main():
+    cfg = get_smoke_config("qwen2-7b")
+    params = init_params(cfg, jax.random.key(0))
+    engine = Engine(cfg, params, temperature=0.8, seed=1)
+
+    rng = np.random.default_rng(0)
+    requests = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (4, 12), dtype=np.int32))}
+    out = engine.generate(requests, max_new_tokens=16)
+    for i, row in enumerate(out):
+        print(f"request {i}: prompt(12 tok) → generated {row.tolist()}")
+
+    greedy = Engine(cfg, params, temperature=0.0)
+    a = greedy.generate(requests, max_new_tokens=8)
+    b = greedy.generate(requests, max_new_tokens=8)
+    assert (a == b).all()
+    print("greedy decode deterministic ✓")
+
+if __name__ == "__main__":
+    main()

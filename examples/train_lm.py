@@ -1,0 +1,23 @@
+"""End-to-end LM training example (framework substrate demo).
+
+    PYTHONPATH=src python examples/train_lm.py            # CPU-sized, ~200 steps
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-7b --mesh prod
+                                                          # the TPU-pod path
+
+Drives launch/train.py: sharded train step (FSDP+TP+SP), AdamW+WSD,
+deterministic data, atomic/async checkpointing with resume.  The default
+is a CPU-feasible reduced config; on a pod, pass a full --arch and
+--mesh prod to train the real configuration.
+"""
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        sys.argv += [
+            "--arch", "qwen1.5-0.5b", "--smoke", "--steps", "200",
+            "--batch", "8", "--seq", "128", "--ckpt-dir", "/tmp/repro_train_lm",
+            "--log-every", "20",
+        ]
+    train_main()

@@ -1,0 +1,2 @@
+"""repro: staged blocked Floyd-Warshall (Lund & Smith 2010) as a multi-pod JAX framework."""
+__version__ = "0.1.0"

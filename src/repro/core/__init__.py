@@ -1,0 +1,26 @@
+"""Core: the paper's contribution — staged blocked Floyd-Warshall."""
+from repro.core.floyd_warshall import fw_blocked, fw_naive, fw_numpy
+from repro.core.semiring import (
+    MAX_MIN,
+    MAX_PLUS,
+    MIN_PLUS,
+    OR_AND,
+    PLUS_MUL,
+    SEMIRINGS,
+    Semiring,
+)
+from repro.core.staged import fw_staged
+
+__all__ = [
+    "fw_blocked",
+    "fw_naive",
+    "fw_numpy",
+    "fw_staged",
+    "Semiring",
+    "MIN_PLUS",
+    "MAX_PLUS",
+    "MAX_MIN",
+    "OR_AND",
+    "PLUS_MUL",
+    "SEMIRINGS",
+]

@@ -1,0 +1,303 @@
+"""Multi-pod distributed blocked Floyd-Warshall (shard_map).
+
+Scales the paper's single-GPU 3-phase algorithm to a 2-D/3-D device mesh —
+the SUMMA-style distribution (cf. communication-avoiding FW, Solomonik et
+al.):
+
+  * W (n,n) is block-distributed: rows over the mesh row axes (``pod`` ×
+    ``data``), columns over the mesh column axis (``model``); each device
+    holds an (n/R, n/C) block.
+  * Per round b (pivot block of width s):
+      1. the raw diagonal tile is broadcast with a masked ``pmin`` (owner
+         contributes its tile, everyone else +inf — the ⊕-identity makes
+         the reduction a broadcast in log(P) hops) and every device closes
+         it redundantly (phase 1, O(s³) — negligible);
+      2. the raw pivot row/column panel slices are pmin-broadcast along the
+         row/column mesh axes and every device closes its own (s, n/C) /
+         (n/R, s) slice (phase 2);
+      3. every device relaxes its local block against the two panels
+         (phase 3 — the paper's staged kernel, running per device).
+  * Comm per device per round: s² + s·n/C + s·n/R words; over n/s rounds
+    → n²(1/R + 1/C) — the SUMMA bound.
+
+Relaxing the pivot bands again during phase 3 is a no-op for idempotent ⊕
+(they are already closed under k ∈ block), which keeps every device's
+program identical — no diverging control flow, pure SPMD.
+
+Fault tolerance: the algorithm is a monotone fixed-point iteration, so any
+round boundary is a consistent checkpoint, and *re-running* a round on
+restart is harmless (relaxations are idempotent).  ``fw_distributed``
+executes in jitted chunks of ``rounds_per_call`` rounds and invokes a host
+callback between chunks for checkpointing (see ``train/checkpoint.py`` for
+the manager used by the launcher).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.semiring import MIN_PLUS, Semiring
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str] | str) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def _my_index(axes: Sequence[str] | str) -> jax.Array:
+    """Flattened device index along a (possibly compound) mesh axis."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+_UNROLL_INNER = False  # counting mode: python-loop the k iterations so
+# cost_analysis sees true trip-multiplied FLOPs (launch/fw_dryrun.py)
+
+
+def _loop(n, body, init):
+    if _UNROLL_INNER:
+        x = init
+        for k in range(n):
+            x = body(k, x)
+        return x
+    return jax.lax.fori_loop(0, n, body, init)
+
+
+def _phase1(diag, semiring):
+    s = diag.shape[0]
+
+    def body(k, t):
+        return semiring.add(t, semiring.mul(t[:, k, None], t[k, None, :]))
+
+    return _loop(s, body, diag)
+
+
+def _phase2_row(diag, panel, semiring):
+    s = diag.shape[0]
+
+    def body(k, p):
+        return semiring.add(p, semiring.mul(diag[:, k, None], p[k, None, :]))
+
+    return _loop(s, body, panel)
+
+
+def _phase2_col(diag, panel, semiring):
+    s = diag.shape[0]
+
+    def body(k, p):
+        return semiring.add(p, semiring.mul(p[:, k, None], diag[k, None, :]))
+
+    return _loop(s, body, panel)
+
+
+def _phase3_jnp(w, col_panel, row_panel, semiring, chunk: int = 8):
+    """Local W ⊕= col_panel ⊗ row_panel without an (n_r, s, n_c) blowup.
+
+    Processes the contraction in k-chunks (the staged idea, in jnp): each
+    chunk materializes (n_r, chunk, n_c) — `chunk` controls the transient.
+    """
+    s = col_panel.shape[1]
+
+    def body(i, w):
+        a = jax.lax.dynamic_slice(col_panel, (0, i * chunk), (w.shape[0], chunk))
+        b = jax.lax.dynamic_slice(row_panel, (i * chunk, 0), (chunk, w.shape[1]))
+        upd = semiring.add_reduce(semiring.mul(a[:, :, None], b[None, :, :]), axis=1)
+        return semiring.add(w, upd)
+
+    if s % chunk:
+        return semiring.add(
+            w,
+            semiring.add_reduce(
+                semiring.mul(col_panel[:, :, None], row_panel[None, :, :]), axis=1
+            ),
+        )
+    return _loop(s // chunk, body, w)
+
+
+def _phase3_pallas(w, col_panel, row_panel, semiring, interpret):
+    from repro.kernels.minplus_matmul import semiring_matmul
+
+    n_r, n_c = w.shape
+    bm = 256 if n_r % 256 == 0 else n_r
+    bn = 256 if n_c % 256 == 0 else n_c
+    bk = min(32, col_panel.shape[1])
+    return semiring_matmul(
+        col_panel, row_panel, w, semiring=semiring, bm=bm, bn=bn, bk=bk,
+        interpret=interpret,
+    )
+
+
+def build_fw_shard_fn(
+    mesh: Mesh,
+    n: int,
+    *,
+    block_size: int = 128,
+    row_axes: Sequence[str] | str = "data",
+    col_axes: Sequence[str] | str = "model",
+    semiring: Semiring = MIN_PLUS,
+    backend: str = "jnp",
+    interpret: bool | None = None,
+    lookahead: bool = False,
+    phase2_shard: bool = False,
+):
+    """Returns (sharded_step_fn, in_sharding) for `rounds_per_call` rounds.
+
+    sharded_step_fn(w, first_round) runs rounds [first_round,
+    first_round+rounds_per_call) — it is jit-compiled once and reused for
+    every chunk.  n, block_size, mesh shape are static.
+
+    phase2_shard (beyond-paper, §Perf): the panel closures are j-(resp. i-)
+    independent, so instead of every device redundantly closing its full
+    (s, n_c) panel slice, each device closes a 1/R (resp. 1/C) chunk and the
+    chunks are all-gathered.  Compute drops R×/C× for ~2× panel comm —
+    a clear win whenever the workload is compute-bound (the Pallas backend).
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    R = _axis_size(mesh, row_axes)
+    C = _axis_size(mesh, col_axes)
+    s = block_size
+    n_r, n_c = n // R, n // C
+    if n % (R * s) or n % (C * s) or n_r % s or n_c % s:
+        raise ValueError(
+            f"n={n} must give per-device blocks divisible by block_size={s} "
+            f"on mesh R={R}, C={C}"
+        )
+
+    row_t = (row_axes,) if isinstance(row_axes, str) else tuple(row_axes)
+    col_t = (col_axes,) if isinstance(col_axes, str) else tuple(col_axes)
+    spec = P(row_t if len(row_t) > 1 else row_t[0], col_t if len(col_t) > 1 else col_t[0])
+
+    def one_round(b, wl):
+        o = b * s
+        my_r = _my_index(row_t)
+        my_c = _my_index(col_t)
+        owner_r = o // n_r
+        owner_c = o // n_c
+        row_in = o - owner_r * n_r
+        col_in = o - owner_c * n_c
+        zero = jnp.asarray(semiring.zero, wl.dtype)
+
+        # --- phase 1: masked-pmin broadcast of the raw diag, close locally.
+        diag_raw = jax.lax.dynamic_slice(wl, (row_in, col_in), (s, s))
+        is_owner = jnp.logical_and(my_r == owner_r, my_c == owner_c)
+        diag_raw = jnp.where(is_owner, diag_raw, zero)
+        # ⊕-reduce across the whole mesh == broadcast from the owner.
+        diag = _bcast(diag_raw, row_t + col_t, semiring)
+        diag = _phase1(diag, semiring)
+
+        # --- phase 2: broadcast raw panels; close redundantly everywhere,
+        # or close a 1/R (1/C) chunk each + all-gather (phase2_shard).
+        rp_raw = jax.lax.dynamic_slice(wl, (row_in, 0), (s, n_c))
+        rp_raw = jnp.where(my_r == owner_r, rp_raw, zero)
+        rp_raw = _bcast(rp_raw, row_t, semiring)
+        if phase2_shard and n_c % R == 0:
+            wch = n_c // R
+            chunk = jax.lax.dynamic_slice(rp_raw, (0, my_r * wch), (s, wch))
+            chunk = _phase2_row(diag, chunk, semiring)
+            rp = jax.lax.all_gather(chunk, row_t, axis=1, tiled=True)
+        else:
+            rp = _phase2_row(diag, rp_raw, semiring)
+
+        cp_raw = jax.lax.dynamic_slice(wl, (0, col_in), (n_r, s))
+        cp_raw = jnp.where(my_c == owner_c, cp_raw, zero)
+        cp_raw = _bcast(cp_raw, col_t, semiring)
+        if phase2_shard and n_r % C == 0:
+            hch = n_r // C
+            chunk = jax.lax.dynamic_slice(cp_raw, (my_c * hch, 0), (hch, s))
+            chunk = _phase2_col(diag, chunk, semiring)
+            cp = jax.lax.all_gather(chunk, col_t, axis=0, tiled=True)
+        else:
+            cp = _phase2_col(diag, cp_raw, semiring)
+
+        # --- write panels back on owners (select keeps SPMD uniform).
+        wl_rows = jax.lax.dynamic_update_slice(wl, rp, (row_in, 0))
+        wl = jnp.where(my_r == owner_r, wl_rows, wl)
+        wl_cols = jax.lax.dynamic_update_slice(wl, cp, (0, col_in))
+        wl = jnp.where(my_c == owner_c, wl_cols, wl)
+
+        # --- phase 3: relax the whole local block (pivot bands → no-op).
+        if backend == "pallas":
+            wl = _phase3_pallas(wl, cp, rp, semiring, interpret)
+        else:
+            wl = _phase3_jnp(wl, cp, rp, semiring)
+        return wl
+
+    def _bcast(x, axes, sr):
+        """⊕-reduction broadcast for any semiring (pmin/pmax/psum as fits)."""
+        if sr.add is jnp.minimum:
+            return jax.lax.pmin(x, axes)
+        if sr.add is jnp.maximum:
+            return jax.lax.pmax(x, axes)
+        return jax.lax.psum(x, axes)  # PLUS_MUL: zero = 0 ⇒ sum-broadcast
+
+    def chunk_fn(wl, first_round, num_rounds):
+        def body(i, wl):
+            return one_round(first_round + i, wl)
+
+        return jax.lax.fori_loop(0, num_rounds, body, wl)
+
+    sharded = jax.shard_map(
+        functools.partial(chunk_fn),
+        mesh=mesh,
+        in_specs=(spec, P(), P()),
+        out_specs=spec,
+        check_vma=False,
+    )
+    in_sharding = NamedSharding(mesh, spec)
+    return sharded, in_sharding
+
+
+def fw_distributed(
+    w: np.ndarray | jax.Array,
+    mesh: Mesh,
+    *,
+    block_size: int = 128,
+    row_axes: Sequence[str] | str = "data",
+    col_axes: Sequence[str] | str = "model",
+    semiring: Semiring = MIN_PLUS,
+    backend: str = "jnp",
+    rounds_per_call: int | None = None,
+    checkpoint_cb: Callable[[int, jax.Array], None] | None = None,
+    start_round: int = 0,
+    phase2_shard: bool = False,
+) -> jax.Array:
+    """Run distributed FW to completion; returns the (sharded) result.
+
+    checkpoint_cb(next_round, w) is called after every jitted chunk —
+    restart by passing ``start_round`` = the last checkpointed round.
+    """
+    n = w.shape[0]
+    s = block_size
+    rounds = n // s
+    if rounds_per_call is None:
+        rounds_per_call = rounds
+    sharded, sharding = build_fw_shard_fn(
+        mesh, n, block_size=s, row_axes=row_axes, col_axes=col_axes,
+        semiring=semiring, backend=backend, phase2_shard=phase2_shard,
+    )
+    step = jax.jit(sharded, static_argnames=(), donate_argnums=(0,))
+    wl = jax.device_put(jnp.asarray(w), sharding)
+    b = start_round
+    while b < rounds:
+        todo = min(rounds_per_call, rounds - b)
+        wl = step(wl, jnp.int32(b), jnp.int32(todo))
+        b += todo
+        if checkpoint_cb is not None:
+            checkpoint_cb(b, wl)
+    return wl

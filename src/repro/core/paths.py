@@ -1,0 +1,51 @@
+"""Shortest-path reconstruction (successor matrix) for APSP.
+
+The paper computes distances only; real deployments (routing tables — one of
+the paper's motivating applications) need next-hops.  We track a successor
+matrix alongside the distance matrix: succ[i,j] = next vertex after i on the
+shortest i→j path.  The FW relaxation updates it wherever the distance
+improves.  This doubles HBM traffic, which is why it is a separate entry
+point rather than a flag on the hot kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def fw_with_successors(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """FW returning (dist, succ).  succ[i,j] = -1 where no path exists."""
+    n = w.shape[0]
+    has_edge = jnp.isfinite(w) & ~jnp.eye(n, dtype=bool)
+    succ = jnp.where(has_edge, jnp.broadcast_to(jnp.arange(n)[None, :], (n, n)), -1)
+    succ = jnp.where(jnp.eye(n, dtype=bool), jnp.arange(n)[:, None], succ)
+
+    def body(k, carry):
+        w, succ = carry
+        cand = w[:, k, None] + w[k, None, :]
+        better = cand < w
+        w = jnp.where(better, cand, w)
+        succ = jnp.where(better, succ[:, k, None], succ)
+        return w, succ
+
+    return jax.lax.fori_loop(0, n, body, (w, succ))
+
+
+def extract_path(succ: np.ndarray, src: int, dst: int, max_len: int | None = None) -> list[int]:
+    """Walk the successor matrix from src to dst (host-side)."""
+    succ = np.asarray(succ)
+    if succ[src, dst] < 0:
+        return []
+    path = [src]
+    cur = src
+    limit = max_len or succ.shape[0] + 1
+    while cur != dst and len(path) <= limit:
+        cur = int(succ[cur, dst])
+        if cur < 0:
+            return []
+        path.append(cur)
+    return path

@@ -1,0 +1,107 @@
+"""Semiring algebra underlying blocked Floyd-Warshall.
+
+The paper's kernel computes C[i,j] ⊕= ⊕_k (A[i,k] ⊗ B[k,j]) over the
+tropical (min,+) semiring.  We keep the algebra abstract so the same
+blocked/staged kernel machinery serves:
+
+  * ``MIN_PLUS``  — all-pairs shortest paths (the paper's workload)
+  * ``MAX_PLUS``  — critical paths / longest paths (DAG scheduling)
+  * ``OR_AND``    — transitive closure (Warshall's original formulation)
+  * ``MAX_MIN``   — maximum-capacity (bottleneck) paths
+  * ``PLUS_MUL``  — ordinary linear algebra; routed to the MXU via jnp.dot
+
+On TPU only PLUS_MUL can use the MXU; the tropical semirings execute on the
+VPU, which changes the roofline (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """A semiring (⊕, ⊗, 0̄, 1̄) with jnp-broadcasting operators.
+
+    Attributes:
+      name: identifier used in configs / benchmark tables.
+      add: the ⊕ combiner (associative, commutative), e.g. ``jnp.minimum``.
+      mul: the ⊗ combiner, e.g. ``jnp.add`` for min-plus.
+      zero: identity of ⊕ (annihilator of ⊗), e.g. ``+inf`` for min-plus.
+      one: identity of ⊗, e.g. ``0.0`` for min-plus.
+      add_reduce: reduction form of ⊕ over an axis, e.g. ``jnp.min``.
+      uses_mxu: True iff ⊗/⊕ lower to a hardware matmul (dot-general).
+    """
+
+    name: str
+    add: Callable[[Array, Array], Array]
+    mul: Callable[[Array, Array], Array]
+    zero: float
+    one: float
+    add_reduce: Callable[..., Array]
+    uses_mxu: bool = False
+
+    def matmul_reference(self, a: Array, b: Array) -> Array:
+        """O(m·k·n) reference ⊕/⊗ matmul (the jnp oracle for the kernels).
+
+        Shapes: a (m,k), b (k,n) → (m,n).  Materializes the (m,k,n)
+        broadcast, so use only for modest sizes (tests).
+        """
+        if self.uses_mxu:
+            return jnp.dot(a, b)
+        return self.add_reduce(self.mul(a[:, :, None], b[None, :, :]), axis=1)
+
+
+MIN_PLUS = Semiring(
+    name="min_plus",
+    add=jnp.minimum,
+    mul=jnp.add,
+    zero=float("inf"),
+    one=0.0,
+    add_reduce=jnp.min,
+)
+
+MAX_PLUS = Semiring(
+    name="max_plus",
+    add=jnp.maximum,
+    mul=jnp.add,
+    zero=float("-inf"),
+    one=0.0,
+    add_reduce=jnp.max,
+)
+
+MAX_MIN = Semiring(
+    name="max_min",
+    add=jnp.maximum,
+    mul=jnp.minimum,
+    zero=float("-inf"),
+    one=float("inf"),
+    add_reduce=jnp.max,
+)
+
+# Boolean OR-AND on {0,1} floats/ints (Warshall transitive closure).  We keep
+# it arithmetic (max/min on {0,1}) so the same dtype paths work on the VPU.
+OR_AND = Semiring(
+    name="or_and",
+    add=jnp.maximum,
+    mul=jnp.minimum,
+    zero=0.0,
+    one=1.0,
+    add_reduce=jnp.max,
+)
+
+PLUS_MUL = Semiring(
+    name="plus_mul",
+    add=jnp.add,
+    mul=jnp.multiply,
+    zero=0.0,
+    one=1.0,
+    add_reduce=jnp.sum,
+    uses_mxu=True,
+)
+
+SEMIRINGS = {s.name: s for s in (MIN_PLUS, MAX_PLUS, MAX_MIN, OR_AND, PLUS_MUL)}

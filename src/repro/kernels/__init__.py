@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the paper's compute hot spots (min-plus FW)."""

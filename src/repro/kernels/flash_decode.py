@@ -1,0 +1,118 @@
+"""Flash-decode attention kernel — the paper's staging pattern reused.
+
+Single-token decode attention against a long KV cache is the LM workload
+whose structure matches the paper's phase-3 kernel exactly:
+
+  * the output accumulator (one query's heads) stays resident in VMEM
+    across the whole contraction (the paper's register-resident tile);
+  * only a (bs × hd) slice of K/V streams through VMEM per grid step (the
+    paper's staged k-slice of the dependency panels), double-buffered by
+    Pallas against the running-softmax update.
+
+The running accumulation is the (max, sum-exp, weighted-V) online softmax
+(FlashAttention/FlashDecoding); positions ≥ kv_len are masked.
+
+Layout: grid (B, Hkv, S/bs) with the KV dimension innermost ("arbitrary" —
+revisits the same output block); scratch m/l in VMEM persist across steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, bs: int, scale: float):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (bs, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)       # (bs, hd)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                     # (g, bs)
+    pos = kb * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = pos < kvlen_ref[0]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]                           # (g, 1)
+    m_new = jnp.maximum(m_prev, logits.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)               # (g, 1)
+    p = jnp.exp(logits - m_new)                   # (g, bs)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (g, hd)
+
+    @pl.when(kb == pl.num_programs(2) - 1)
+    def _():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def flash_decode(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    kv_len: jax.Array,
+    *,
+    bs: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """q (B, Hkv, g, hd); k/v (B, S, Hkv, hd); kv_len () int32 → (B, Hkv, g, hd).
+
+    Attends q over k/v[:, :kv_len]; S % bs == 0.
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    b, hkv, g, hd = q.shape
+    s = k.shape[1]
+    if s % bs:
+        bs = s
+    scale = hd ** -0.5
+    grid = (b, hkv, s // bs)
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+        scratch_shapes = [
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ]
+    except Exception:  # pragma: no cover
+        compiler_params = None
+        scratch_shapes = []
+    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, bs=bs, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, kb: (0,)),  # kv_len scalar
+            pl.BlockSpec((1, 1, g, hd), lambda bi, hi, kb: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, kb: (bi, kb, hi, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda bi, hi, kb: (bi, kb, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda bi, hi, kb: (bi, hi, 0, 0)),
+        scratch_shapes=scratch_shapes,
+        interpret=interpret,
+        compiler_params=compiler_params,
+    )(kv_len, q, k, v)

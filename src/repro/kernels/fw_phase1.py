@@ -1,0 +1,43 @@
+"""Phase-1 (independent / diagonal block) Pallas kernel.
+
+One (s,s) tile, s sequential FW iterations.  The tile is loaded into VMEM
+once, the k-loop carries the whole tile as a value (VREG-resident working
+set, the paper's "registers" idea applied to the diagonal phase), and the
+result is stored once.  There is no grid: phase 1 is O(s³) work on O(s²)
+data and is never the bottleneck (the paper runs it as a single thread
+block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.semiring import MIN_PLUS, Semiring
+
+
+def _phase1_kernel(w_ref, o_ref, *, semiring: Semiring):
+    s = w_ref.shape[0]
+    t = w_ref[...]
+
+    def body(k, t):
+        return semiring.add(t, semiring.mul(t[:, k, None], t[k, None, :]))
+
+    o_ref[...] = jax.lax.fori_loop(0, s, body, t)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "interpret"))
+def fw_phase1(
+    tile: jax.Array, *, semiring: Semiring = MIN_PLUS, interpret: bool = False
+) -> jax.Array:
+    """In-place FW closure of one diagonal tile (s,s)."""
+    s = tile.shape[0]
+    if tile.shape != (s, s):
+        raise ValueError(f"diagonal tile must be square, got {tile.shape}")
+    return pl.pallas_call(
+        functools.partial(_phase1_kernel, semiring=semiring),
+        out_shape=jax.ShapeDtypeStruct((s, s), tile.dtype),
+        interpret=interpret,
+    )(tile)

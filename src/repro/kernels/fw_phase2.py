@@ -1,0 +1,94 @@
+"""Phase-2 (singly dependent panel) Pallas kernels.
+
+The row band W[b,*] (s × n) and column band W[*,b] (n × s) each depend on
+the already-closed diagonal tile and on themselves (row/column k feeds
+iterations k' > k), so k is sequential *within* a tile but tiles along the
+band are independent → grid over the band, diagonal broadcast to every
+program.
+
+VMEM per program: diag (s·s) + panel tile (s·bt or bt·s).  With s=128,
+bt=512, fp32: 64KB + 256KB — small enough that many band tiles pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.semiring import MIN_PLUS, Semiring
+
+
+def _row_kernel(d_ref, p_ref, o_ref, *, semiring: Semiring):
+    s = d_ref.shape[0]
+    d = d_ref[...]
+
+    def body(k, p):
+        return semiring.add(p, semiring.mul(d[:, k, None], p[k, None, :]))
+
+    o_ref[...] = jax.lax.fori_loop(0, s, body, p_ref[...])
+
+
+def _col_kernel(d_ref, p_ref, o_ref, *, semiring: Semiring):
+    s = d_ref.shape[0]
+    d = d_ref[...]
+
+    def body(k, p):
+        return semiring.add(p, semiring.mul(p[:, k, None], d[k, None, :]))
+
+    o_ref[...] = jax.lax.fori_loop(0, s, body, p_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "semiring", "interpret"))
+def fw_phase2_row(
+    diag: jax.Array,
+    band: jax.Array,
+    *,
+    bt: int = 512,
+    semiring: Semiring = MIN_PLUS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Update the row band (s, n): band ⊕= diag ⊗ band, k sequential."""
+    s, n = band.shape
+    bt = min(bt, n)
+    if n % bt:
+        raise ValueError(f"band width {n} not divisible by bt={bt}")
+    return pl.pallas_call(
+        functools.partial(_row_kernel, semiring=semiring),
+        out_shape=jax.ShapeDtypeStruct((s, n), band.dtype),
+        grid=(n // bt,),
+        in_specs=[
+            pl.BlockSpec((s, s), lambda j: (0, 0)),
+            pl.BlockSpec((s, bt), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((s, bt), lambda j: (0, j)),
+        interpret=interpret,
+    )(diag, band)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "semiring", "interpret"))
+def fw_phase2_col(
+    diag: jax.Array,
+    band: jax.Array,
+    *,
+    bt: int = 512,
+    semiring: Semiring = MIN_PLUS,
+    interpret: bool = False,
+) -> jax.Array:
+    """Update the column band (n, s): band ⊕= band ⊗ diag, k sequential."""
+    n, s = band.shape
+    bt = min(bt, n)
+    if n % bt:
+        raise ValueError(f"band height {n} not divisible by bt={bt}")
+    return pl.pallas_call(
+        functools.partial(_col_kernel, semiring=semiring),
+        out_shape=jax.ShapeDtypeStruct((n, s), band.dtype),
+        grid=(n // bt,),
+        in_specs=[
+            pl.BlockSpec((s, s), lambda i: (0, 0)),
+            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, s), lambda i: (i, 0)),
+        interpret=interpret,
+    )(diag, band)

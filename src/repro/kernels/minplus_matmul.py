@@ -1,0 +1,167 @@
+"""Staged semiring matmul — the paper's doubly-dependent (phase 3) kernel.
+
+This is the TPU re-derivation of the paper's core idea (§4 of the paper):
+
+  * CUDA: the doubly-dependent 32×32 tile lives in *registers* (one slice per
+    thread); only a 32×m slice (m=8) of each singly-dependent panel sits in
+    shared memory per stage; stages are separated by __syncthreads so the
+    scheduler can overlap other blocks' loads with compute.
+
+  * TPU/Pallas: the output tile C (bm×bn) stays resident in VMEM across the
+    innermost ``k`` grid dimension (``dimension_semantics = (parallel,
+    parallel, arbitrary)`` revisits the same output block), while BlockSpecs
+    stream only (bm×bk) / (bk×bn) panel slices per grid step.  Pallas
+    double-buffers the next slice's HBM→VMEM DMA against the current
+    stage's compute — the same latency-hiding the paper bought by shrinking
+    shared-memory residency.  The inner k-loop carries rank-1 tropical
+    updates in VREGs (the register-residency analogue).
+
+VMEM budget per grid step (fp32, fused variant):
+    C (bm·bn) + A-slice (bm·bk) + B-slice (bk·bn) + C_in (bm·bn), ×2 for
+    double buffering of the streamed operands.
+    bm=bn=256, bk=32: 2·256·256·4 + 2·2·(256·32)·4 = 524KB + 131KB ≈ 0.7MB
+    → ~20 co-resident stages would fit the 128MB VMEM of a v5e core; the
+    practical pipeline depth is set by Pallas (2-stage); small bk buys
+    overlap granularity exactly like the paper's m=8 staging.
+
+The (min,+) semiring cannot use the MXU (which only fuses (×,+)), so the
+compute unit is the VPU; tiles are shaped to the (8,128) vreg lattice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.semiring import MIN_PLUS, Semiring
+
+Variant = Literal["fori", "unroll", "broadcast"]
+
+
+def _stage_compute(
+    acc: jax.Array,
+    a_blk: jax.Array,
+    b_blk: jax.Array,
+    semiring: Semiring,
+    variant: Variant,
+) -> jax.Array:
+    """⊕-accumulate one (bm×bk)·(bk×bn) panel-slice stage into acc."""
+    bk = a_blk.shape[1]
+    if variant == "broadcast":
+        # Materializes (bm, bk, bn) in VMEM — fewer, fatter VPU ops.
+        prod = semiring.add_reduce(
+            semiring.mul(a_blk[:, :, None], b_blk[None, :, :]), axis=1
+        )
+        return semiring.add(acc, prod)
+
+    def body(kk, acc):
+        # Rank-1 tropical update; a column/row pair broadcast across VREGs.
+        return semiring.add(acc, semiring.mul(a_blk[:, kk, None], b_blk[kk, None, :]))
+
+    if variant == "unroll":
+        # The paper's loop-unrolling optimization (§4, "standard
+        # optimizations ... unrolling loops"): python loop → straight-line HLO.
+        for kk in range(bk):
+            acc = body(kk, acc)
+        return acc
+    return jax.lax.fori_loop(0, bk, body, acc)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, semiring: Semiring, variant: Variant):
+    """C = A ⊗⊕ B (no input accumulator)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.full_like(o_ref, semiring.zero)
+
+    o_ref[...] = _stage_compute(o_ref[...], a_ref[...], b_ref[...], semiring, variant)
+
+
+def _fused_kernel(c_ref, a_ref, b_ref, o_ref, *, semiring: Semiring, variant: Variant):
+    """C_out = C_in ⊕ (A ⊗⊕ B) — the FW phase-3 relaxation, C resident."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] = _stage_compute(o_ref[...], a_ref[...], b_ref[...], semiring, variant)
+
+
+def _fit_block(dim: int, want: int) -> int:
+    """Largest divisor of dim that is ≤ want (keeps grids exact for any n)."""
+    want = min(want, dim)
+    for b in range(want, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+def _grid_call(kernel, out_shape, grid, in_specs, out_specs, interpret, *args):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except Exception:  # pragma: no cover - older pallas versions
+        compiler_params = None
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        interpret=interpret,
+        compiler_params=compiler_params,
+    )(*args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("semiring", "bm", "bn", "bk", "variant", "interpret"),
+)
+def semiring_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array | None = None,
+    *,
+    semiring: Semiring = MIN_PLUS,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 32,
+    variant: Variant = "fori",
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked, staged C [⊕=] A ⊗⊕ B.
+
+    a (m,k), b (k,n), optional c (m,n).  m % bm == n % bn == k % bk == 0.
+    ``bk`` is the staging depth — the TPU analogue of the paper's m=8
+    shared-memory slice.  ``variant`` selects the inner-loop lowering
+    ("fori" | "unroll" | "broadcast"), mirroring the paper's
+    instruction-level optimization axis.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
+    bm, bn, bk = _fit_block(m, bm), _fit_block(n, bn), _fit_block(k, bk)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shape ({m},{k})x({k2},{n}) not divisible by ({bm},{bn},{bk})")
+    grid = (m // bm, n // bn, k // bk)
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    c_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+    out_shape = jax.ShapeDtypeStruct((m, n), a.dtype)
+
+    if c is None:
+        kern = functools.partial(_matmul_kernel, semiring=semiring, variant=variant)
+        return _grid_call(kern, out_shape, grid, [a_spec, b_spec], c_spec, interpret, a, b)
+    kern = functools.partial(_fused_kernel, semiring=semiring, variant=variant)
+    return _grid_call(
+        kern, out_shape, grid, [c_spec, a_spec, b_spec], c_spec, interpret, c, a, b
+    )

@@ -1,0 +1,88 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to auto-detection: Pallas TPU kernels execute natively
+on TPU and fall back to interpret mode on CPU (this container), keeping the
+whole library runnable everywhere while targeting TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import MIN_PLUS, OR_AND, Semiring
+from repro.kernels import ref
+from repro.kernels.fw_phase1 import fw_phase1
+from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
+from repro.kernels.minplus_matmul import semiring_matmul
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """True when no TPU is present (interpret the kernels on CPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def minplus_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array | None = None,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 32,
+    variant: str = "fori",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(min,+) matmul, optionally fused with a ⊕= accumulator C."""
+    if interpret is None:
+        interpret = default_interpret()
+    return semiring_matmul(
+        a, b, c, semiring=MIN_PLUS, bm=bm, bn=bn, bk=bk, variant=variant,
+        interpret=interpret,
+    )
+
+
+def fw_phase3(
+    w: jax.Array,
+    col_band: jax.Array,
+    row_band: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 32,
+    variant: str = "fori",
+    semiring: Semiring = MIN_PLUS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Doubly-dependent update: W ⊕= col_band ⊗ row_band (staged kernel)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return semiring_matmul(
+        col_band, row_band, w, semiring=semiring, bm=bm, bn=bn, bk=bk,
+        variant=variant, interpret=interpret,
+    )
+
+
+def transitive_closure(adj: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Boolean transitive closure via the OR-AND semiring (Warshall 1962).
+
+    adj: (n,n) {0,1} float matrix with 1s on the diagonal.
+    """
+    from repro.core.staged import fw_staged  # local import to avoid cycle
+
+    return fw_staged(adj, semiring=OR_AND, interpret=interpret)
+
+
+__all__ = [
+    "default_interpret",
+    "minplus_matmul",
+    "fw_phase1",
+    "fw_phase2_row",
+    "fw_phase2_col",
+    "fw_phase3",
+    "semiring_matmul",
+    "transitive_closure",
+    "ref",
+]

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` is the semantic ground truth used by the allclose sweeps in
+``tests/test_kernels.py``.  They are deliberately written in the most direct
+(unblocked) form — no staging, no tiling — so a kernel bug cannot be
+mirrored in its oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.semiring import MIN_PLUS, Semiring
+
+
+def semiring_matmul_ref(
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array | None = None,
+    *,
+    semiring: Semiring = MIN_PLUS,
+) -> jax.Array:
+    """C ⊕= A ⊗ B over the semiring; returns A⊗B if C is None.
+
+    a (m,k), b (k,n), c (m,n).  Materializes the (m,k,n) broadcast.
+    """
+    prod = semiring.add_reduce(semiring.mul(a[:, :, None], b[None, :, :]), axis=1)
+    if c is None:
+        return prod
+    return semiring.add(c, prod)
+
+
+def fw_phase1_ref(tile: jax.Array, *, semiring: Semiring = MIN_PLUS) -> jax.Array:
+    """Sequential in-tile FW: s iterations of w ⊕= w[:,k] ⊗ w[k,:]."""
+    s = tile.shape[0]
+
+    def body(k, t):
+        return semiring.add(t, semiring.mul(t[:, k, None], t[k, None, :]))
+
+    return jax.lax.fori_loop(0, s, body, tile)
+
+
+def fw_phase2_row_ref(
+    diag: jax.Array, panel: jax.Array, *, semiring: Semiring = MIN_PLUS
+) -> jax.Array:
+    """Row panel (s, t): p ⊕= diag[:,k] ⊗ p[k,:], k sequential."""
+    s = diag.shape[0]
+
+    def body(k, p):
+        return semiring.add(p, semiring.mul(diag[:, k, None], p[k, None, :]))
+
+    return jax.lax.fori_loop(0, s, body, panel)
+
+
+def fw_phase2_col_ref(
+    diag: jax.Array, panel: jax.Array, *, semiring: Semiring = MIN_PLUS
+) -> jax.Array:
+    """Col panel (t, s): p ⊕= p[:,k] ⊗ diag[k,:], k sequential."""
+    s = diag.shape[0]
+
+    def body(k, p):
+        return semiring.add(p, semiring.mul(p[:, k, None], diag[k, None, :]))
+
+    return jax.lax.fori_loop(0, s, body, panel)
+
+
+def fw_phase3_ref(
+    w: jax.Array,
+    col_band: jax.Array,
+    row_band: jax.Array,
+    *,
+    semiring: Semiring = MIN_PLUS,
+) -> jax.Array:
+    """W ⊕= col_band ⊗ row_band without blocking (k looped to bound memory)."""
+    s = col_band.shape[1]
+
+    def body(k, w):
+        return semiring.add(w, semiring.mul(col_band[:, k, None], row_band[k, None, :]))
+
+    return jax.lax.fori_loop(0, s, body, w)
+
+
+def flash_decode_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array
+) -> jax.Array:
+    """Oracle for the flash-decode kernel: plain masked softmax attention.
+
+    q (B,Hkv,g,hd); k/v (B,S,Hkv,hd); kv_len () → (B,Hkv,g,hd).
+    """
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(k.shape[1]) < kv_len
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell with ShapeDtypeStruct inputs (no allocation), print memory/cost
+analysis, and derive roofline terms (launch/roofline.py).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k --mesh single --out experiments/dryrun
+
+Environment: REPRO_XLA_FLAGS overrides the 512-device default (used by the
+reduced-mesh CI test).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ShapeConfig, cells, get_config, list_archs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import init_cache, init_params, model_flops
+from repro.models.transformer import unrolled_stack
+from repro.serve.engine import make_serve_fns
+from repro.train.optimizer import OptimizerConfig, init_state
+from repro.train.train_step import make_train_step, mesh_axes
+
+V5E_HBM = 16 * 2 ** 30
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_sds(cfg, shape_cfg: ShapeConfig, with_labels: bool):
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    d = {"tokens": _sds((b, s), jnp.int32)}
+    if with_labels:
+        d["labels"] = _sds((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        d["image_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder is not None:
+        d["frames"] = _sds((b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    return d
+
+
+def build_train(cfg, shape_cfg, mesh):
+    opt_cfg = OptimizerConfig(
+        state_dtype="bfloat16" if cfg.name.startswith("kimi") else "float32"
+    )
+    step, in_sh, out_sh = make_train_step(cfg, opt_cfg, mesh)
+    params_s = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    opt_s = jax.eval_shape(functools.partial(init_state, opt_cfg), params_s)
+    batch = _batch_sds(cfg, shape_cfg, with_labels=True)
+    fn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    return fn, (params_s, opt_s, batch)
+
+
+def build_prefill(cfg, shape_cfg, mesh):
+    fns = make_serve_fns(cfg, mesh, batch=shape_cfg.global_batch,
+                         max_seq=shape_cfg.seq_len)
+    batch = _batch_sds(cfg, shape_cfg, with_labels=False)
+    axes = mesh_axes(mesh)
+    dp = 1
+    for a in axes.dp:
+        dp *= mesh.shape[a]
+    bspec = axes.dp_spec if shape_cfg.global_batch % dp == 0 else None
+    batch_sh = {
+        "tokens": NamedSharding(mesh, P(bspec, None)),
+        **{
+            k: NamedSharding(mesh, P(bspec, None, None))
+            for k in ("image_embeds", "frames")
+            if k in batch
+        },
+    }
+    fn = jax.jit(
+        fns["prefill"],
+        in_shardings=(fns["param_sh"], batch_sh),
+        out_shardings=(fns["logits_sh"], fns["cache_sh"]),
+    )
+    params_s = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    return fn, (params_s, batch)
+
+
+def build_decode(cfg, shape_cfg, mesh):
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    fns = make_serve_fns(cfg, mesh, batch=b, max_seq=s)
+    fn = jax.jit(
+        fns["decode"],
+        in_shardings=(fns["param_sh"], fns["tok_sh"], NamedSharding(mesh, P()),
+                      fns["cache_sh"]),
+        out_shardings=(fns["logits_sh"], fns["cache_sh"]),
+        donate_argnums=(3,),
+    )
+    params_s = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    return fn, (params_s, _sds((b,), jnp.int32), _sds((), jnp.int32),
+                fns["cache_shapes"])
+
+
+BUILDERS = {"train": build_train, "prefill": build_prefill, "decode": build_decode}
+
+
+def lower_compile(cfg, shape_cfg, mesh):
+    fn, args = BUILDERS[shape_cfg.kind](cfg, shape_cfg, mesh)
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _reduced(cfg, n_periods: int):
+    enc = (
+        dataclasses.replace(cfg.encoder, n_layers=n_periods)
+        if cfg.encoder is not None
+        else None
+    )
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_periods * len(cfg.layer_pattern),
+        grad_accum=1,
+        encoder=enc,
+    )
+
+
+def roofline_for(cfg, shape_cfg, mesh) -> rl.RooflineTerms:
+    """Trip-count-corrected totals via unrolled L=1 / L=2 lowering."""
+    vals = {}
+    for lcount in (1, 2):
+        with unrolled_stack():
+            comp = lower_compile(_reduced(cfg, lcount), shape_cfg, mesh)
+        flops, byts = rl.cost_flops_bytes(comp)
+        coll = rl.parse_collective_bytes(comp.as_text())
+        vals[lcount] = (flops, byts, coll)
+    npd = cfg.n_periods
+    f = rl.extrapolate(vals[1][0], vals[2][0], npd)
+    by = rl.extrapolate(vals[1][1], vals[2][1], npd)
+    kinds = set(vals[1][2]) | set(vals[2][2])
+    coll = {
+        # clamp: XLA occasionally fuses differently at L=2, giving a small
+        # negative slope for a collective kind — physically impossible.
+        k: max(rl.extrapolate(vals[1][2].get(k, 0.0), vals[2][2].get(k, 0.0), npd),
+               vals[1][2].get(k, 0.0))
+        for k in kinds
+    }
+    mf = model_flops(
+        cfg, kind=shape_cfg.kind, global_batch=shape_cfg.global_batch,
+        seq_len=shape_cfg.seq_len,
+    )
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    return rl.RooflineTerms(
+        flops=f, bytes_hbm=by, coll_bytes=sum(coll.values()), chips=chips,
+        model_flops=mf, coll_detail=coll,
+    )
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, with_roofline: bool,
+             grad_accum: int | None = None, moe_impl: str | None = None):
+    cfg = get_config(arch)
+    if grad_accum is not None:
+        cfg = dataclasses.replace(cfg, grad_accum=grad_accum)
+    if moe_impl is not None:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    shape_cfg = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    compiled = lower_compile(cfg, shape_cfg, mesh)
+    compile_s = time.time() - t0
+    ma = compiled.memory_analysis()
+    print(compiled.memory_analysis())  # the assignment-required fit proof
+    flops_once, bytes_once = rl.cost_flops_bytes(compiled)
+    print({"flops(body-once)": flops_once, "bytes(body-once)": bytes_once})
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+        "kind": shape_cfg.kind,
+        "compile_s": round(compile_s, 1),
+        "argument_bytes_per_dev": ma.argument_size_in_bytes,
+        "output_bytes_per_dev": ma.output_size_in_bytes,
+        "temp_bytes_per_dev": ma.temp_size_in_bytes,
+        "peak_bytes_per_dev": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+        "fits_v5e_16gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes)
+        < V5E_HBM,
+    }
+    if with_roofline and not multi_pod:  # roofline table is single-pod only
+        t0 = time.time()
+        terms = roofline_for(cfg, shape_cfg, mesh)
+        rec["roofline"] = terms.to_dict()
+        rec["roofline_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None,
+                    help="override the config's microbatch count (§Perf)")
+    ap.add_argument("--moe-impl", default=None, choices=["dense", "a2a"],
+                    help="override the MoE dispatch implementation (§Perf)")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape_cfg in cells(arch):
+            if args.shape != "all" and shape_cfg.name not in args.shape.split(","):
+                continue
+            for multi in meshes:
+                tag = f"{arch}__{shape_cfg.name}__{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip] {tag} (exists)")
+                    continue
+                print(f"[cell] {tag}")
+                try:
+                    rec = run_cell(
+                        arch, shape_cfg.name, multi,
+                        with_roofline=not args.no_roofline,
+                        grad_accum=args.grad_accum,
+                        moe_impl=args.moe_impl,
+                    )
+                    if args.grad_accum is not None:
+                        rec["grad_accum_override"] = args.grad_accum
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    rf = rec.get("roofline", {})
+                    print(
+                        f"[ok]   {tag} compile={rec['compile_s']}s "
+                        f"peak/dev={rec['peak_bytes_per_dev']/2**30:.2f}GiB "
+                        f"fits={rec['fits_v5e_16gb']} "
+                        + (
+                            f"bottleneck={rf.get('bottleneck')} "
+                            f"roofline_frac={rf.get('roofline_fraction', 0):.3f}"
+                            if rf
+                            else ""
+                        )
+                    )
+                except Exception as e:  # record the failure, keep sweeping
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("all cells passed")
+
+
+if __name__ == "__main__":
+    main()

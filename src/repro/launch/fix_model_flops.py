@@ -1,0 +1,34 @@
+"""Recompute model_flops / useful_ratio / roofline_fraction in existing
+dry-run JSONs after the head/encoder token-stream correction (the measured
+flops/bytes/collective terms are unchanged — no recompile needed)."""
+import glob
+import json
+import sys
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.roofline import PEAK_FLOPS_BF16
+from repro.models.model import model_flops
+
+
+def main(pattern="experiments/dryrun/*.json"):
+    for path in sorted(glob.glob(pattern)):
+        rec = json.load(open(path))
+        rf = rec.get("roofline")
+        if not rf:
+            continue
+        cfg = get_config(rec["arch"])
+        sc = SHAPES[rec["shape"]]
+        mf = model_flops(cfg, kind=sc.kind, global_batch=sc.global_batch,
+                         seq_len=sc.seq_len)
+        chips = rf["chips"]
+        t_max = max(rf["t_compute_s"], rf["t_memory_s"], rf["t_collective_s"])
+        rf["model_flops"] = mf
+        rf["useful_ratio"] = mf / (rf["flops_per_chip"] * chips)
+        rf["roofline_fraction"] = (mf / chips / t_max) / PEAK_FLOPS_BF16
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"{rec['arch']:22s} {rec['shape']:12s} useful={rf['useful_ratio']:.3f} "
+              f"frac={rf['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

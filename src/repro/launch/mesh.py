@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state — required because dryrun.py must set XLA_FLAGS before any
+jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_devices: int | None = None, *, pods: int = 1):
+    """Small CPU-device mesh for tests/examples (devices already forced)."""
+    n = n_devices or len(jax.devices())
+    if pods > 1:
+        rows = max(1, n // pods // 2)
+        cols = n // pods // rows
+        return jax.make_mesh(
+            (pods, rows, cols), ("pod", "data", "model"),
+            axis_types=(AxisType.Auto,) * 3,
+        )
+    rows = max(1, n // 2)
+    return jax.make_mesh(
+        (rows, n // rows), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

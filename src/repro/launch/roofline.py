@@ -1,0 +1,143 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs   / (chips × 197e12  bf16 FLOP/s)
+    memory term     = HLO_bytes   / (chips × 819e9   B/s HBM)
+    collective term = coll_bytes  / (chips × 50e9    B/s per ICI link)
+
+cost_analysis() counts while-loop (scan) bodies ONCE (verified in
+DESIGN.md §6), so totals are obtained by lowering the model *unrolled* at
+L = 1·period and 2·period layers and extrapolating linearly:
+    F(L) = F(1) + (F(2) − F(1)) · (L − 1).
+
+Collective bytes are parsed from the post-SPMD compiled HLO (per-device
+program): the summed operand bytes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops (async *-start ops
+counted once, *-done skipped).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e hardware constants (per chip) — assignment-specified.
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+
+_COLL_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\]\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# Operand types for a collective line: everything inside parens like
+# `f32[8,128]{1,0} %name` — capture dtype+shape tokens.
+_OPERAND_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device collective traffic (summed operand bytes) by op kind."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        # Operand list = everything after the op name's '('; operands are
+        # typed inline in post-optimization HLO.  Skip the result type
+        # (before '=') by splitting at the op match end.
+        args = line[m.end():]
+        total = sum(_shape_bytes(d, s) for d, s in _OPERAND_RE.findall(args))
+        if total == 0:  # fall back to result shape
+            total = _shape_bytes(m.group(1), m.group(2))
+        out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float            # total per-device HLO FLOPs
+    bytes_hbm: float        # total per-device HLO bytes accessed
+    coll_bytes: float       # total per-device collective operand bytes
+    chips: int
+    model_flops: float      # 6·N·D (train) or 2·N·D (inference), global
+    coll_detail: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs (global) — catches remat/redundancy."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs rate achievable at the bound, as a fraction of peak:
+        (MODEL_FLOPS/chips / max_term) / PEAK — the §Perf score."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t == 0:
+            return 0.0
+        return (self.model_flops / self.chips / t) / PEAK_FLOPS_BF16
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_hbm,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def extrapolate(v1: float, v2: float, n_periods: int) -> float:
+    """Linear trip-count extrapolation from L=1 and L=2 period lowers."""
+    return v1 + (v2 - v1) * (n_periods - 1)
+
+
+def cost_flops_bytes(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))

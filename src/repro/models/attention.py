@@ -1,0 +1,290 @@
+"""Attention: GQA/MHA (+QKV bias), MLA (DeepSeek latent attention), cross.
+
+Memory discipline: the (Sq × Skv) score matrix is never materialized whole
+for long sequences — queries are processed in chunks (lax.map), bounding the
+transient to (B, H, cq, Skv).  This is the jnp realization of the paper's
+staged-streaming idea (small resident slice, accumulator stays live); the
+Pallas flash/decode kernels in repro.kernels apply it at the VMEM level.
+
+Decode with a sequence-sharded KV cache lowers to a split-K distributed
+softmax (GSPMD inserts the (max, sumexp, pv) reductions over the "model"
+axis) — FlashDecoding-style, see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, apply_rope, init_norm, rope_cos_sin
+
+NEG_INF = -1e30
+
+
+def _attn_core(q, k, v, *, q_pos, causal: bool, scale: float) -> jax.Array:
+    """q (B,Sq,Hkv,g,hd), k/v (B,Skv,Hkv,hd), q_pos (B,Sq) → (B,Sq,Hkv,g,hd)."""
+    logits = jnp.einsum("bqhgd,bshd->bhgqs", q, k, preferred_element_type=jnp.float32)
+    logits = logits * scale
+    if causal:
+        kv_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        mask = kv_pos[None, None, None, None, :] <= q_pos[:, None, None, :, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgqs,bshd->bqhgd", p.astype(v.dtype), v)
+
+
+def grouped_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    causal: bool = True,
+    chunk_q: int = 512,
+    scale: float | None = None,
+) -> jax.Array:
+    """q (B,Sq,Hq,hd), k/v (B,Skv,Hkv,hd) → (B,Sq,Hq,hd)."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, sq, hkv, g, hd)
+
+    vd = v.shape[-1]  # may differ from hd (MLA: qk dim ≠ v dim)
+    if sq <= chunk_q or sq % chunk_q:
+        out = _attn_core(qg, k, v, q_pos=q_pos, causal=causal, scale=scale)
+        return out.reshape(b, sq, hq, vd)
+
+    nq = sq // chunk_q
+    qs = qg.reshape(b, nq, chunk_q, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    ps = q_pos.reshape(b, nq, chunk_q).transpose(1, 0, 2)
+
+    # Per-chunk remat: without it the backward saves every chunk's softmax
+    # probabilities at once (≈7.5 GiB/layer on qwen2-72b train_4k);
+    # rematerializing per chunk bounds the residual to one chunk — the
+    # flash-attention recompute strategy at the jnp level (§Perf iter B).
+    @jax.checkpoint
+    def one(args):
+        qc, pc = args
+        return _attn_core(qc, k, v, q_pos=pc, causal=causal, scale=scale)
+
+    out = jax.lax.map(one, (qs, ps))  # (nq, B, cq, hkv, g, vd)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, vd)
+    return out
+
+
+# ----------------------------------------------------------------- GQA/MHA
+def init_attention(cfg: ModelConfig, key: jax.Array, *, cross: bool = False) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "norm": init_norm(cfg, d),
+        "wq": (jax.random.normal(ks[0], (d, hq * hd)) * sc).astype(jnp.bfloat16),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd)) * sc).astype(jnp.bfloat16),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd)) * sc).astype(jnp.bfloat16),
+        "wo": (jax.random.normal(ks[3], (hq * hd, d)) * (hq * hd) ** -0.5).astype(
+            jnp.bfloat16
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.bfloat16)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.bfloat16)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.bfloat16)
+    if cross:
+        # Zero-init tanh gate (llama-3.2-vision cross-attn injection).
+        p["gate"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def _project_qkv(h, p, cfg, ctx=None):
+    b, s, _ = h.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    src = h if ctx is None else ctx
+    q = h @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(*src.shape[:2], hkv, hd)
+    v = v.reshape(*src.shape[:2], hkv, hd)
+    return q, k, v
+
+
+def self_attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: dict | None = None,
+    *,
+    causal: bool = True,
+) -> tuple[jax.Array, dict | None]:
+    """Returns (residual_delta, new_cache).
+
+    cache = {"k": (B,Smax,Hkv,hd), "v": ..., } — decode writes at
+    positions[:,0] (lockstep batch decode); prefill fills [0:S).
+    """
+    h = apply_norm(x, p["norm"], cfg)
+    q, k, v = _project_qkv(h, p, cfg)
+    cos, sin = rope_cos_sin(positions, cfg.head_dim_, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        if x.shape[1] == cache["k"].shape[1]:  # prefill fills the whole cache
+            new_cache = {"k": k, "v": v}
+        else:  # decode: write the new row at the current position
+            pos = positions[0, 0]
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0)),
+            }
+        k, v = new_cache["k"], new_cache["v"]
+
+    out = grouped_attention(q, k, v, q_pos=positions, causal=causal)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def cross_attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    ctx_embeds: jax.Array | None,
+    cache: dict | None = None,
+    *,
+    gated: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    """Attention over context embeddings (image patches / encoder output).
+
+    At prefill the projected context K/V are cached; decode reuses them.
+    """
+    h = apply_norm(x, p["norm"], cfg)
+    if cache is not None and ctx_embeds is None:
+        b, s, _ = h.shape
+        hq, hd = cfg.n_heads, cfg.head_dim_
+        q = (h @ p["wq"]).reshape(b, s, hq, hd)
+        if cfg.qkv_bias:
+            q = q + p["bq"].reshape(hq, hd)
+        k, v = cache["ck"], cache["cv"]
+        new_cache = cache
+    else:
+        q, k, v = _project_qkv(h, p, cfg, ctx=ctx_embeds)
+        new_cache = {"ck": k, "cv": v} if cache is not None else None
+    qp = jnp.zeros(q.shape[:2], jnp.int32)  # no mask → positions unused
+    out = grouped_attention(q, k, v, q_pos=qp, causal=False)
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, -1) @ p["wo"]
+    if gated:
+        out = out * jnp.tanh(p["gate"]).astype(out.dtype)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------- MLA
+def init_mla(cfg: ModelConfig, key: jax.Array) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    nd, rd, vd, rkv, rq = (
+        m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank,
+        m.q_lora_rank,
+    )
+    ks = jax.random.split(key, 8)
+    sc = d ** -0.5
+    p = {
+        "norm": init_norm(cfg, d),
+        "w_dkv": (jax.random.normal(ks[0], (d, rkv)) * sc).astype(jnp.bfloat16),
+        "kv_norm": init_norm(cfg, rkv),
+        "w_kpe": (jax.random.normal(ks[1], (d, rd)) * sc).astype(jnp.bfloat16),
+        "w_uk": (jax.random.normal(ks[2], (rkv, h * nd)) * rkv ** -0.5).astype(jnp.bfloat16),
+        "w_uv": (jax.random.normal(ks[3], (rkv, h * vd)) * rkv ** -0.5).astype(jnp.bfloat16),
+        "wo": (jax.random.normal(ks[4], (h * vd, d)) * (h * vd) ** -0.5).astype(jnp.bfloat16),
+    }
+    if rq:
+        p["w_dq"] = (jax.random.normal(ks[5], (d, rq)) * sc).astype(jnp.bfloat16)
+        p["q_norm"] = init_norm(cfg, rq)
+        p["w_uq"] = (jax.random.normal(ks[6], (rq, h * (nd + rd))) * rq ** -0.5).astype(
+            jnp.bfloat16
+        )
+    else:
+        p["wq"] = (jax.random.normal(ks[7], (d, h * (nd + rd))) * sc).astype(jnp.bfloat16)
+    return p
+
+
+def _mla_q(h, p, cfg, cos, sin):
+    m = cfg.mla
+    b, s, _ = h.shape
+    nh, nd, rd = cfg.n_heads, m.qk_nope_head_dim, m.qk_rope_head_dim
+    if m.q_lora_rank:
+        cq = apply_norm(h @ p["w_dq"], p["q_norm"], cfg)
+        q = cq @ p["w_uq"]
+    else:
+        q = h @ p["wq"]
+    q = q.reshape(b, s, nh, nd + rd)
+    q_nope, q_pe = q[..., :nd], q[..., nd:]
+    q_pe = apply_rope(q_pe, cos, sin)
+    return q_nope, q_pe
+
+
+def mla_attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """MLA forward.  Train/prefill decompress K/V per head; decode uses the
+    absorbed form (score and context computed directly in the kv_lora latent
+    space — the published inference optimization, and the reason the cache
+    is only (B, S, rkv + rd) per layer)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    nh = cfg.n_heads
+    nd, rd, vd, rkv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    scale = (nd + rd) ** -0.5
+
+    h = apply_norm(x, p["norm"], cfg)
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    q_nope, q_pe = _mla_q(h, p, cfg, cos, sin)
+
+    c_kv = apply_norm(h @ p["w_dkv"], p["kv_norm"], cfg)  # (B,S,rkv)
+    k_pe = apply_rope((h @ p["w_kpe"]).reshape(b, s, 1, rd), cos, sin)[:, :, 0]
+
+    decode = cache is not None and s != cache["c_kv"].shape[1]
+    new_cache = None
+    if cache is not None:
+        if not decode:
+            new_cache = {"c_kv": c_kv, "k_pe": k_pe}
+        else:
+            pos = positions[0, 0]
+            new_cache = {
+                "c_kv": jax.lax.dynamic_update_slice(cache["c_kv"], c_kv, (0, pos, 0)),
+                "k_pe": jax.lax.dynamic_update_slice(cache["k_pe"], k_pe, (0, pos, 0)),
+            }
+        c_kv, k_pe = new_cache["c_kv"], new_cache["k_pe"]
+
+    skv = c_kv.shape[1]
+    kv_pos = jnp.arange(skv, dtype=jnp.int32)
+    mask = kv_pos[None, None, None, :] <= positions[:, None, :, None]  # (B,1,Sq,Skv)
+
+    if decode:
+        # Absorbed: q_lat = q_nope · W_uk → score in latent space.
+        w_uk = p["w_uk"].reshape(rkv, nh, nd)
+        q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+        logits = jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv, preferred_element_type=jnp.float32)
+        logits += jnp.einsum("bqhr,bsr->bhqs", q_pe, k_pe, preferred_element_type=jnp.float32)
+        logits = jnp.where(mask, logits * scale, NEG_INF)
+        prob = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", prob.astype(c_kv.dtype), c_kv)
+        w_uv = p["w_uv"].reshape(rkv, nh, vd)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)
+    else:
+        k_nope = (c_kv @ p["w_uk"]).reshape(b, skv, nh, nd)
+        v = (c_kv @ p["w_uv"]).reshape(b, skv, nh, vd)
+        k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, skv, nh, rd))], -1)
+        q_full = jnp.concatenate([q_nope, q_pe], -1)
+        out = grouped_attention(q_full, k_full, v, q_pos=positions, causal=True, scale=scale)
+
+    return out.reshape(b, s, nh * vd) @ p["wo"], new_cache

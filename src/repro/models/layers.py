@@ -1,0 +1,110 @@
+"""Shared layer primitives: norms, rotary embedding, FFNs, embeddings.
+
+Numerics policy: parameters and activations in bf16; norms, softmax,
+logsumexp and router math in f32 (upcast at the op, downcast after).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.norm_kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, d: int) -> dict:
+    p = {"scale": jnp.ones((d,), jnp.bfloat16)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.bfloat16)
+    return p
+
+
+# ------------------------------------------------------------------ rotary
+def rope_cos_sin(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) int32 → cos/sin (..., dim/2) f32."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (B, S, H, hd); cos/sin (B, S, hd/2).  Pairs are (even, odd) halves
+    (llama convention: rotate_half)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# -------------------------------------------------------------------- FFN
+def init_dense_ffn(cfg: ModelConfig, key: jax.Array, d_in: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = d_in ** -0.5
+    p = {
+        "norm": init_norm(cfg, d_in),
+        "w1": (jax.random.normal(k1, (d_in, d_ff)) * scale).astype(jnp.bfloat16),
+        "w2": (jax.random.normal(k2, (d_ff, d_in)) * (d_ff ** -0.5)).astype(jnp.bfloat16),
+    }
+    if cfg.act == "swiglu":
+        p["w3"] = (jax.random.normal(k3, (d_in, d_ff)) * scale).astype(jnp.bfloat16)
+    else:  # gelu MLPs (whisper) carry biases
+        p["b1"] = jnp.zeros((d_ff,), jnp.bfloat16)
+        p["b2"] = jnp.zeros((d_in,), jnp.bfloat16)
+    return p
+
+
+def dense_ffn(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """Post-norm-input FFN body (caller adds the residual)."""
+    h = apply_norm(x, p["norm"], cfg)
+    if cfg.act == "swiglu":
+        a = h @ p["w1"]
+        g = h @ p["w3"]
+        return (jax.nn.silu(a.astype(jnp.float32)).astype(x.dtype) * g) @ p["w2"]
+    a = h @ p["w1"] + p["b1"]
+    a = jax.nn.gelu(a.astype(jnp.float32)).astype(x.dtype)
+    return a @ p["w2"] + p["b2"]
+
+
+# -------------------------------------------------------------- embeddings
+def init_embed(cfg: ModelConfig, key: jax.Array) -> jax.Array:
+    return (jax.random.normal(key, (cfg.vocab_padded, cfg.d_model)) * 0.02).astype(
+        jnp.bfloat16
+    )
+
+
+def embed_tokens(table: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = table[tokens]
+    if cfg.emb_scale != 1.0:
+        x = x * jnp.asarray(cfg.emb_scale, x.dtype)
+    return x
+
+
+def lm_logits(x: jax.Array, params: dict, cfg: ModelConfig) -> jax.Array:
+    """Final-norm → LM head; f32 logits, vocab column-parallel."""
+    x = apply_norm(x, params["final_norm"], cfg)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=jnp.float32)
+    if cfg.logits_divisor != 1.0:
+        logits = logits / cfg.logits_divisor
+    return logits

@@ -1,0 +1,240 @@
+"""Top-level model API: init / train-forward / prefill / decode / caches.
+
+Pure functions, params-first; every architecture in the assigned pool is
+driven through these four entry points.  Modality frontends are stubs per
+the assignment: VLM image patches and audio frames arrive as precomputed
+embeddings in the batch (see configs/base.py input_specs in launch/dryrun).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models.layers import (
+    apply_norm,
+    embed_tokens,
+    init_embed,
+    init_norm,
+    lm_logits,
+)
+from repro.models.ssm import _dims as ssm_dims
+from repro.models.transformer import init_stack, stack_forward
+from repro.utils import sharding as shd
+
+ENC_PATTERN = (LayerSpec(kind="attn", ffn="dense"),)
+
+
+# -------------------------------------------------------------------- init
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    k_emb, k_stack, k_head, k_enc = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": init_embed(cfg, k_emb),
+        "periods": init_stack(cfg, k_stack),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(k_head, (cfg.d_model, cfg.vocab_padded)) * 0.02
+        ).astype(jnp.bfloat16)
+    if cfg.encoder is not None:
+        params["encoder"] = {
+            "periods": init_stack(cfg, k_enc, ENC_PATTERN, cfg.encoder.n_layers),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+    return params
+
+
+# ----------------------------------------------------------------- forward
+def _encode(cfg: ModelConfig, params: dict, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stub frame embeddings (B, n_frames, D)."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _, _ = stack_forward(
+        frames, params["encoder"]["periods"], cfg, pos, pattern=ENC_PATTERN,
+        causal=False,
+    )
+    return apply_norm(x, params["encoder"]["final_norm"], cfg)
+
+
+def _context(cfg, params, batch: dict) -> jax.Array | None:
+    if cfg.encoder is not None:
+        return _encode(cfg, params, batch["frames"])
+    if cfg.family == "vlm":
+        return batch["image_embeds"]
+    return None
+
+
+def forward_train(
+    cfg: ModelConfig, params: dict, batch: dict
+) -> tuple[jax.Array, jax.Array]:
+    """batch: tokens (B,S) [+ image_embeds | frames].  Returns (logits f32
+    vocab-sharded, aux_loss)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    ctx = _context(cfg, params, batch)
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = shd.constrain_resid(x)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _, aux = stack_forward(x, params["periods"], cfg, pos, ctx_embeds=ctx)
+    logits = lm_logits(x, params, cfg)
+    return shd.constrain_logits(logits), aux
+
+
+# ------------------------------------------------------------------ caches
+def init_cache(
+    cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16
+) -> dict:
+    """Stacked (n_periods, ...) cache pytree matching the layer pattern."""
+    n_ctx = cfg.n_image_tokens or (cfg.encoder.n_frames if cfg.encoder else 0)
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+
+    def one(spec: LayerSpec) -> dict:
+        c: dict[str, Any] = {}
+        if spec.kind == "mamba":
+            s = cfg.ssm
+            di, nh, conv_dim = ssm_dims(cfg)
+            c["conv"] = jnp.zeros((cfg.n_periods, batch, s.d_conv - 1, conv_dim), dtype)
+            c["ssm"] = jnp.zeros(
+                (cfg.n_periods, batch, nh, s.d_state, s.head_dim), jnp.float32
+            )
+            return c
+        if spec.kind in ("attn", "attn_cross"):
+            if cfg.mla is not None:
+                m = cfg.mla
+                c["c_kv"] = jnp.zeros((cfg.n_periods, batch, max_seq, m.kv_lora_rank), dtype)
+                c["k_pe"] = jnp.zeros((cfg.n_periods, batch, max_seq, m.qk_rope_head_dim), dtype)
+            else:
+                c["k"] = jnp.zeros((cfg.n_periods, batch, max_seq, hkv, hd), dtype)
+                c["v"] = jnp.zeros((cfg.n_periods, batch, max_seq, hkv, hd), dtype)
+        if spec.kind in ("cross_attn", "attn_cross"):
+            c["ck"] = jnp.zeros((cfg.n_periods, batch, n_ctx, hkv, hd), dtype)
+            c["cv"] = jnp.zeros((cfg.n_periods, batch, n_ctx, hkv, hd), dtype)
+        return c
+
+    return {f"l{i}": one(s) for i, s in enumerate(cfg.layer_pattern)}
+
+
+# ------------------------------------------------------------------- serve
+def prefill(
+    cfg: ModelConfig, params: dict, batch: dict
+) -> tuple[jax.Array, dict]:
+    """Process the prompt, returning (last-position logits, filled caches).
+
+    The returned caches have sequence capacity == prompt length; the engine
+    extends them for generation (serve/engine.py).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    ctx = _context(cfg, params, batch)
+    caches = init_cache(cfg, b, s)
+    x = embed_tokens(params["embed"], tokens, cfg)
+    x = shd.constrain_resid(x)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, new_caches, _ = stack_forward(
+        x, params["periods"], cfg, pos, caches=caches, ctx_embeds=ctx
+    )
+    logits = lm_logits(x[:, -1:], params, cfg)
+    return logits[:, 0], new_caches
+
+
+def decode_step(
+    cfg: ModelConfig, params: dict, token: jax.Array, pos: jax.Array, caches: dict
+) -> tuple[jax.Array, dict]:
+    """One lockstep decode step.  token (B,), pos scalar int32 (current
+    write position; all sequences advance together).  Returns (logits (B,V),
+    updated caches)."""
+    b = token.shape[0]
+    x = embed_tokens(params["embed"], token[:, None], cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x, new_caches, _ = stack_forward(
+        x, params["periods"], cfg, positions, caches=caches, ctx_embeds=None
+    )
+    logits = lm_logits(x, params, cfg)
+    return logits[:, 0], new_caches
+
+
+# ------------------------------------------------------------------ counts
+def _param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Total (or per-token active) parameter count.
+
+    active_only scales routed-expert tensors by top_k / n_experts (the MoE
+    6·N_active·D convention).
+    """
+    shapes = _param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        keys = [getattr(p, "key", "") for p in path]
+        is_routed = (
+            cfg.moe is not None
+            and any(k in ("w1", "w2", "w3", "router") for k in keys)
+            and "ffn" in keys
+            and leaf.ndim >= 3
+        )
+        if active_only and is_routed:
+            n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        total += n
+    return total
+
+
+def matmul_param_count(cfg: ModelConfig, active_only: bool = True) -> int:
+    """Params participating in per-token matmuls (MODEL_FLOPS = 6·N·tokens):
+    excludes the embedding gather, includes the LM head (tied or not)."""
+    n = count_params(cfg, active_only=active_only)
+    emb = cfg.vocab_padded * cfg.d_model
+    if cfg.tie_embeddings:
+        return n  # the single table *is* the head matmul
+    return n - emb
+
+
+def flops_param_groups(cfg: ModelConfig, active_only: bool = True) -> dict:
+    """Split matmul params by the token stream they act on (roofline):
+
+      body — decoder stack params × decoder tokens
+      enc  — encoder stack params × encoder frames (whisper)
+      head — lm-head matmul (d_model × padded vocab) × positions where
+             logits are actually computed (all for train, last for prefill,
+             one for decode)
+    """
+    total = matmul_param_count(cfg, active_only=active_only)
+    n_head = cfg.d_model * cfg.vocab_padded
+    n_enc = 0
+    if cfg.encoder is not None:
+        shapes = _param_shapes(cfg)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            keys = [str(getattr(p, "key", "")) for p in path]
+            if "encoder" in keys and leaf.ndim >= 2:
+                n = 1
+                for d in leaf.shape:
+                    n *= d
+                n_enc += n
+    return {"body": total - n_head - n_enc, "enc": n_enc, "head": n_head}
+
+
+def model_flops(cfg: ModelConfig, *, kind: str, global_batch: int,
+                seq_len: int) -> float:
+    """Useful-FLOPs for a step: 6·N·D (train) / 2·N·D (inference), with the
+    head counted only where logits are computed and encoder params counted
+    on encoder frames."""
+    g = flops_param_groups(cfg, active_only=True)
+    mult = 6.0 if kind == "train" else 2.0
+    toks_body = global_batch * (seq_len if kind != "decode" else 1)
+    # The encoder runs at train/prefill only (decode reuses cross caches).
+    toks_enc = (
+        global_batch * cfg.encoder.n_frames
+        if cfg.encoder and kind != "decode"
+        else 0
+    )
+    toks_head = global_batch * (seq_len if kind == "train" else 1)
+    return mult * (g["body"] * toks_body + g["enc"] * toks_enc
+                   + g["head"] * toks_head)

@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-dropping dispatch,
+optional shared experts (DeepSeek/Kimi style).
+
+Dispatch is *sort-based* (argsort → within-expert rank → scatter into an
+(E, C, D) buffer), never a (T, E, C) one-hot einsum — at kimi-k2 scale
+(T=32k tokens/row, E=384) the one-hot dispatch tensor alone would be tens
+of GB per device (DESIGN.md §6).  Capacity is per batch row:
+C = ceil(S·k/E · capacity_factor); overflow tokens are dropped (standard
+"dropping" MoE), and the residual connection carries them unchanged.
+Note: capacity depends on the call's sequence length, so teacher-forced
+training and prefill+decode can drop *different* tokens — expected dropping-
+MoE behavior; smoke configs use capacity_factor=8 (dropless) so the
+prefill/decode consistency test compares identical math.
+
+Expert parallelism: expert weights are sharded over the "model" axis on the
+expert dim (EP); the dispatch buffer carries the matching constraint so the
+expert GEMMs stay local.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm, init_norm
+from repro.utils import sharding as shd
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array) -> dict:
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 7)
+    sc = d ** -0.5
+    p = {
+        "norm": init_norm(cfg, d),
+        "router": (jax.random.normal(ks[0], (d, e)) * sc).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f)) * sc).astype(jnp.bfloat16),
+        "w3": (jax.random.normal(ks[2], (e, d, f)) * sc).astype(jnp.bfloat16),
+        "w2": (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(jnp.bfloat16),
+    }
+    if m.n_shared:
+        fs = f * m.n_shared
+        p["ws1"] = (jax.random.normal(ks[4], (d, fs)) * sc).astype(jnp.bfloat16)
+        p["ws3"] = (jax.random.normal(ks[5], (d, fs)) * sc).astype(jnp.bfloat16)
+        p["ws2"] = (jax.random.normal(ks[6], (fs, d)) * fs ** -0.5).astype(jnp.bfloat16)
+    return p
+
+
+def _positions_in_expert(e_flat: jax.Array, n_experts: int) -> jax.Array:
+    """Within-expert arrival rank for each assignment, via stable sort.
+
+    e_flat (T,) int32 expert ids → pos (T,) int32: the j-th assignment
+    routed to expert e gets pos j (order-preserving within expert).
+    """
+    t = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    counts = jnp.bincount(e_flat, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    ranks_sorted = jnp.arange(t, dtype=jnp.int32) - starts[e_flat[order]].astype(jnp.int32)
+    return jnp.zeros((t,), jnp.int32).at[order].set(ranks_sorted)
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Returns (ffn_out, aux_load_balance_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    t = s * k
+    cap = max(int(s * k / e * m.capacity_factor + 0.999), k)
+
+    h = apply_norm(x, p["norm"], cfg)
+
+    # --- routing (f32)
+    logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    if m.normalize_gates:
+        gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+
+    e_flat = idx.reshape(b, t).astype(jnp.int32)
+    g_flat = gates.reshape(b, t)
+    pos = jax.vmap(lambda ef: _positions_in_expert(ef, e))(e_flat)  # (B,T)
+    keep = pos < cap
+    tok_of = jnp.arange(t, dtype=jnp.int32) // k  # assignment → source token
+
+    # --- dispatch: (B, E, C, D) buffer, dropped writes fall off the end.
+    def row_scatter(hrow, ef, pf, kf):
+        src = hrow[tok_of] * kf[:, None].astype(hrow.dtype)  # (T, D)
+        pf = jnp.where(kf, pf, cap)  # position `cap` is out of bounds → drop
+        buf = jnp.zeros((e, cap, d), hrow.dtype)
+        return buf.at[ef, pf].add(src, mode="drop")
+
+    buf = jax.vmap(row_scatter)(h, e_flat, pos, keep)
+    # (B,E,C,D): batch over DP, experts over the model axis (EP) — leaving E
+    # unsharded replicates a k·cf-times-inflated token buffer per chip
+    # (9.4 GiB/layer at kimi-k2 scale; §Perf iteration C).
+    buf = shd.constrain_moe_buffer(buf, e)
+
+    # --- expert SwiGLU (E sharded over "model" via the weight pspecs)
+    a = jnp.einsum("becd,edf->becf", buf, p["w1"])
+    g3 = jnp.einsum("becd,edf->becf", buf, p["w3"])
+    hid = jax.nn.silu(a.astype(jnp.float32)).astype(buf.dtype) * g3
+    out_buf = jnp.einsum("becf,efd->becd", hid, p["w2"])
+
+    # --- combine: gather each assignment's slot, weight, sum over k slots.
+    def row_gather(orow, ef, pf, kf, gf):
+        vals = orow[ef, jnp.minimum(pf, cap - 1)]  # (T, D)
+        vals = vals * (kf * gf)[:, None].astype(vals.dtype)
+        return vals.reshape(s, k, d).sum(axis=1)
+
+    y = jax.vmap(row_gather)(out_buf, e_flat, pos, keep, g_flat).astype(x.dtype)
+
+    # --- shared experts (dense branch, always-on)
+    if m.n_shared:
+        a = h @ p["ws1"]
+        g = h @ p["ws3"]
+        y = y + (jax.nn.silu(a.astype(jnp.float32)).astype(h.dtype) * g) @ p["ws2"]
+
+    # --- Switch-style load-balance aux loss
+    f_e = jax.vmap(lambda ef: jnp.bincount(ef, length=e))(e_flat).astype(jnp.float32)
+    f_e = f_e.mean(0) / t  # fraction of assignments per expert
+    p_e = probs.mean((0, 1))
+    aux = jnp.asarray(e, jnp.float32) * jnp.sum(f_e * p_e)
+    return y, aux * m.aux_loss_coef

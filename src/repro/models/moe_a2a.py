@@ -1,0 +1,154 @@
+"""Expert-parallel MoE with explicit all-to-all dispatch (shard_map).
+
+The jit-level MoE (`models/moe.py`) leaves dispatch to GSPMD, which lowers
+the expert gather-back as large all-gathers (the dominant collective on
+kimi-k2 — EXPERIMENTS.md §Perf H10).  This module moves the dispatch into
+shard_map with the canonical EP pipeline:
+
+  tokens (dp × sp partitioned) ──route──► per-destination send buffers
+     ──all_to_all──► expert owners ──local SwiGLU──► reverse all_to_all
+     ──gate+combine──► tokens
+
+Per chip per layer the collective volume is exactly 2 · A_send · D words
+(A_send = local assignments × capacity factor) instead of buffer-sized
+all-gathers: ~8× less at kimi scale.
+
+Two capacity layers drop overflow (standard dropping semantics):
+  * send capacity  per destination chip:   cap_s = ceil(A_loc/tp · cf)
+  * expert capacity per local expert:      cap_e = ceil(tp·cap_s/E_loc · cf)
+
+Opt-in via ``ModelConfig.moe_impl = "a2a"``; requires an AxisCtx with a
+concrete mesh (train/serve builders install it).  Falls back to the dense
+formulation when no mesh context is present (single-device tests).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_norm
+from repro.models.moe import _positions_in_expert, moe_ffn
+from repro.utils import sharding as shd
+
+
+def moe_ffn_a2a(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Drop-in replacement for moe_ffn using explicit a2a dispatch."""
+    ctx = shd.current()
+    if ctx is None or ctx.mesh is None or cfg.moe.n_experts % ctx.mesh.shape[ctx.tp]:
+        return moe_ffn(x, p, cfg)
+
+    m = cfg.moe
+    mesh = ctx.mesh
+    tp = ctx.tp
+    tp_size = mesh.shape[tp]
+    dp_size = 1
+    for a in ctx.dp:
+        dp_size *= mesh.shape[a]
+    # Tokens must tile the (dp × tp) grid; decode (S=1) and odd batches fall
+    # back to the dense path (decode collectives are handled by the
+    # weight-stationary serving layout instead — §Perf H11).
+    if x.shape[0] % dp_size or x.shape[1] % tp_size:
+        return moe_ffn(x, p, cfg)
+    dp_spec = ctx.dp_spec
+    e_loc = m.n_experts // tp_size
+
+    def inner(xb, router, w1, w3, w2):
+        # xb (B_loc, S_loc, D); weights are the local expert shard with the
+        # full D (FSDP gather, when any, happens outside at jit level).
+        bl, sl, d = xb.shape
+        t_loc = bl * sl
+        a_loc = t_loc * m.top_k
+        cap_s = max(int(a_loc / tp_size * m.capacity_factor + 0.999), m.top_k)
+        cap_e = max(int(tp_size * cap_s / e_loc * m.capacity_factor + 0.999), 1)
+
+        h = xb.reshape(t_loc, d)
+        logits = jnp.einsum("td,de->te", h.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, m.top_k)  # (T,k)
+        if m.normalize_gates:
+            gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+
+        e_flat = idx.reshape(a_loc).astype(jnp.int32)
+        g_flat = gates.reshape(a_loc).astype(jnp.float32)
+        tok_of = jnp.arange(a_loc, dtype=jnp.int32) // m.top_k
+        dest = e_flat // e_loc                      # destination chip
+        e_local = e_flat % e_loc                    # expert within chip
+
+        # --- pack per-destination send buffers (sort-based slotting)
+        pos_d = _positions_in_expert(dest, tp_size)  # rank within dest
+        keep_s = pos_d < cap_s
+        slot = jnp.where(keep_s, pos_d, cap_s)
+        send_x = jnp.zeros((tp_size, cap_s + 1, d), xb.dtype).at[
+            dest, slot
+        ].add(h[tok_of] * keep_s[:, None].astype(xb.dtype), mode="drop")[:, :cap_s]
+        send_e = jnp.full((tp_size, cap_s + 1), e_loc, jnp.int32).at[
+            dest, slot
+        ].min(e_local, mode="drop")[:, :cap_s]      # e_loc = invalid marker
+
+        # --- exchange: row j of recv came from peer j
+        recv_x = jax.lax.all_to_all(send_x, tp, split_axis=0, concat_axis=0,
+                                    tiled=False)
+        recv_e = jax.lax.all_to_all(send_e, tp, split_axis=0, concat_axis=0,
+                                    tiled=False)
+
+        rx = recv_x.reshape(tp_size * cap_s, d)
+        re = recv_e.reshape(tp_size * cap_s)
+        valid = re < e_loc
+        re_c = jnp.where(valid, re, 0)
+
+        # --- dispatch into local experts
+        pos_e = _positions_in_expert(jnp.where(valid, re_c, e_loc), e_loc + 1)
+        keep_e = valid & (pos_e < cap_e)
+        slot_e = jnp.where(keep_e, pos_e, cap_e)
+        buf = jnp.zeros((e_loc, cap_e + 1, d), xb.dtype).at[
+            re_c, slot_e
+        ].add(rx * keep_e[:, None].astype(xb.dtype), mode="drop")[:, :cap_e]
+
+        a = jnp.einsum("ecd,edf->ecf", buf, w1)
+        g3 = jnp.einsum("ecd,edf->ecf", buf, w3)
+        hid = jax.nn.silu(a.astype(jnp.float32)).astype(buf.dtype) * g3
+        out_buf = jnp.einsum("ecf,efd->ecd", hid, w2)
+
+        # --- gather back to recv slots, reverse exchange, combine
+        back = out_buf[re_c, jnp.minimum(slot_e, cap_e - 1)]
+        back = back * keep_e[:, None].astype(back.dtype)
+        back = back.reshape(tp_size, cap_s, d)
+        ret = jax.lax.all_to_all(back, tp, split_axis=0, concat_axis=0,
+                                 tiled=False)
+        vals = ret[dest, jnp.minimum(slot, cap_s - 1)]
+        vals = vals * (keep_s.astype(vals.dtype) * g_flat.astype(vals.dtype))[:, None]
+        y = vals.reshape(t_loc, m.top_k, d).sum(axis=1)
+
+        # --- aux load-balance stats, averaged across all chips so the
+        # outputs are replicated (valid for out_specs=P()).
+        f_e = jnp.bincount(e_flat, length=m.n_experts).astype(jnp.float32) / a_loc
+        p_e = probs.mean(0)
+        axes = (tuple(ctx.dp) if isinstance(ctx.dp, tuple) else (ctx.dp,)) + (tp,)
+        n_dev = 1
+        for ax in axes:
+            n_dev *= mesh.shape[ax]
+        f_e = jax.lax.psum(f_e, axes) / n_dev
+        p_e = jax.lax.psum(p_e, axes) / n_dev
+        return y.reshape(bl, sl, d), f_e, p_e
+
+    h_in = apply_norm(x, p["norm"], cfg)
+    y, f_e, p_e = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(P(dp_spec, tp, None), P(None, None), P(tp, None, None),
+                  P(tp, None, None), P(tp, None, None)),
+        out_specs=(P(dp_spec, tp, None), P(), P()),
+        check_vma=False,
+    )(h_in, p["router"], p["w1"], p["w3"], p["w2"])
+
+    if m.n_shared:
+        a = h_in @ p["ws1"]
+        g = h_in @ p["ws3"]
+        y = y + (jax.nn.silu(a.astype(jnp.float32)).astype(h_in.dtype) * g) @ p["ws2"]
+
+    aux = jnp.asarray(m.n_experts, jnp.float32) * jnp.sum(f_e * p_e)
+    return y.astype(x.dtype), aux * m.aux_loss_coef

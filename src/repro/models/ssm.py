@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked scan formulation.
+
+Training/prefill uses the SSD block decomposition [arXiv:2405.21060 §6]:
+within-chunk quadratic (attention-like) term + inter-chunk state recurrence
+(a short scan over chunks), which maps onto TPU as dense einsums of chunk
+size L — MXU-friendly — plus an O(S/L) sequential scan.  Decode is the
+O(1)-state recurrence.  SSD math runs in f32 (cumulative sums of logs and
+exps); projections stay bf16.
+
+State for decode: conv_state (B, d_conv-1, conv_dim) + ssm_state
+(B, H, N, P) — constant in sequence length, which is why the ssm/hybrid
+archs run the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_norm, rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nheads = di // s.head_dim
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return di, nheads, conv_dim
+
+
+def init_mamba(cfg: ModelConfig, key: jax.Array) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, conv_dim = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    rng = jax.random
+    dt = jnp.exp(
+        rng.uniform(ks[2], (nh,)) * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)
+    )
+    sc = d ** -0.5
+    # The canonical fused in_proj (D → 2·di+2·gn+H) is stored as separate
+    # per-component matrices so each output dim shards evenly over the
+    # 16-way model axis (DESIGN.md §6); XLA fuses the GEMMs back together.
+    return {
+        "norm": init_norm(cfg, d),
+        "wz": (rng.normal(ks[0], (d, di)) * sc).astype(jnp.bfloat16),
+        "wx": (rng.normal(ks[1], (d, di)) * sc).astype(jnp.bfloat16),
+        "wb": (rng.normal(ks[5], (d, gn)) * sc).astype(jnp.bfloat16),
+        "wc": (rng.normal(ks[6], (d, gn)) * sc).astype(jnp.bfloat16),
+        "wdt": (rng.normal(ks[7], (d, nh)) * sc).astype(jnp.bfloat16),
+        "conv_w": (rng.normal(ks[1], (s.d_conv, conv_dim)) * s.d_conv ** -0.5).astype(
+            jnp.bfloat16
+        ),
+        "conv_b": jnp.zeros((conv_dim,), jnp.bfloat16),
+        "A_log": jnp.log(rng.uniform(ks[3], (nh,), minval=1.0, maxval=16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse softplus
+        "out_norm": init_norm(cfg, di),
+        "out_proj": (rng.normal(ks[4], (di, d)) * di ** -0.5).astype(jnp.bfloat16),
+    }
+
+
+def _conv_full(u, p, cfg):
+    """Causal depthwise conv over (B, S, conv_dim); returns same shape."""
+    s = cfg.ssm
+    pad = jnp.pad(u, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + u.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(s.d_conv)
+    )
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(u.dtype)
+
+
+def _expand_groups(t, nh, ng):
+    """(B, ..., G, N) → (B, ..., H, N) by repeating each group H/G times."""
+    return jnp.repeat(t, nh // ng, axis=-2)
+
+
+def mamba_block(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Returns (residual_delta, new_state).
+
+    state=None → training (no state I/O).  state given with S==1 → decode
+    step; otherwise prefill (state is overwritten with the final state).
+    """
+    s = cfg.ssm
+    di, nh, conv_dim = _dims(cfg)
+    b, sl, _ = x.shape
+    h = rms_norm(x, p["norm"]["scale"], cfg.norm_eps)
+    z, xin = h @ p["wz"], h @ p["wx"]
+    bb, cc, dt = h @ p["wb"], h @ p["wc"], h @ p["wdt"]
+
+    decode = state is not None and sl == 1
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)
+    if decode:
+        # Roll the conv window: state holds the previous d_conv-1 inputs.
+        win = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B, d_conv, C)
+        u = jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"]
+        u = jax.nn.silu(u.astype(jnp.float32)).astype(conv_in.dtype)[:, None, :]
+        new_conv = win[:, 1:]
+    else:
+        u = _conv_full(conv_in, p, cfg)
+        new_conv = conv_in[:, max(sl - (s.d_conv - 1), 0) :]
+        if sl < s.d_conv - 1:  # left-pad tiny prefills
+            new_conv = jnp.pad(new_conv, ((0, 0), (s.d_conv - 1 - sl, 0), (0, 0)))
+
+    xin_c, bb_c, cc_c = jnp.split(u, [di, di + s.n_groups * s.d_state], axis=-1)
+    xh = xin_c.reshape(b, sl, nh, s.head_dim)
+    b_g = bb_c.reshape(b, sl, s.n_groups, s.d_state)
+    c_g = cc_c.reshape(b, sl, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,)
+    da = dt * a  # (B,S,H)
+
+    ssm_prev = (
+        state["ssm"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, nh, s.d_state, s.head_dim), jnp.float32)
+    )
+
+    if decode:
+        b_h = _expand_groups(b_g, nh, s.n_groups).astype(jnp.float32)
+        c_h = _expand_groups(c_g, nh, s.n_groups).astype(jnp.float32)
+        xf = xh.astype(jnp.float32)
+        decay = jnp.exp(da[:, 0])  # (B,H)
+        upd = jnp.einsum("bhn,bhp->bhnp", b_h[:, 0], xf[:, 0] * dt[:, 0, :, None])
+        ssm = decay[:, :, None, None] * ssm_prev + upd
+        y = jnp.einsum("bhn,bhnp->bhp", c_h[:, 0], ssm)[:, None]
+        y = y + p["D"][None, None, :, None] * xf
+    else:
+        l = min(s.chunk_size, sl)
+        if sl % l:
+            l = sl  # fall back to one chunk for odd smoke shapes
+        nc = sl // l
+        # One lax.scan over chunks computes the diagonal (intra-chunk) term,
+        # the off-diagonal (state) term, and the state recurrence together,
+        # so only ONE chunk's (B,L,L,H) score tensor is live at a time.
+        # (Materializing all nc chunks at once cost jamba-52B/train_4k
+        # ~8.6 GiB/device of transient — §Perf iteration 1.)  Group→head
+        # expansion and the f32 upcast also happen per chunk: doing either
+        # at full sequence length materializes (B,S,H,N) f32 — 34 GiB for
+        # jamba's 128 heads (§Perf iteration D).
+        dac = da.reshape(b, nc, l, nh).transpose(1, 0, 2, 3)  # (nc,B,L,H)
+        xc = xh.reshape(b, nc, l, nh, s.head_dim).transpose(1, 0, 2, 3, 4)
+        bc = b_g.reshape(b, nc, l, s.n_groups, s.d_state).transpose(1, 0, 2, 3, 4)
+        cc2 = c_g.reshape(b, nc, l, s.n_groups, s.d_state).transpose(1, 0, 2, 3, 4)
+        dtc = dt.reshape(b, nc, l, nh).transpose(1, 0, 2, 3)
+        mask = jnp.tril(jnp.ones((l, l), bool))
+
+        # checkpoint: one chunk's scores/decay tensors otherwise persist per
+        # chunk for the whole layer backward (~40 GiB/layer at jamba scale).
+        @jax.checkpoint
+        def chunk_step(state, inp):
+            da_c, x_c, b_c, c_c, dt_c = inp  # (B,L,H/G,...) per chunk
+            x_c = x_c.astype(jnp.float32)
+            b_c = _expand_groups(b_c, nh, s.n_groups).astype(jnp.float32)
+            c_c = _expand_groups(c_c, nh, s.n_groups).astype(jnp.float32)
+            cum = jnp.cumsum(da_c, axis=1)  # (B,L,H)
+            seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B,L,L,H) i−j
+            lfac = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+            scores = (
+                jnp.einsum("bihn,bjhn->bijh", c_c, b_c) * lfac * dt_c[:, None, :, :]
+            )
+            y_c = jnp.einsum("bijh,bjhp->bihp", scores, x_c)
+            # Off-diagonal: contribution of the state entering this chunk.
+            y_c = y_c + jnp.einsum(
+                "bihn,bhnp->bihp", c_c * jnp.exp(cum)[..., None], state
+            )
+            # State update for the next chunk.
+            decay_last = jnp.exp(cum[:, -1:, :] - cum)  # (B,L,H)
+            upd = jnp.einsum(
+                "bjhn,bjhp->bhnp", b_c * (dt_c * decay_last)[..., None], x_c
+            )
+            new_state = jnp.exp(cum[:, -1])[:, :, None, None] * state + upd
+            return new_state, y_c
+
+        ssm, y = jax.lax.scan(chunk_step, ssm_prev, (dac, xc, bc, cc2, dtc))
+        y = y.transpose(1, 0, 2, 3, 4).reshape(b, sl, nh, s.head_dim)
+        y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+
+    y = y.reshape(b, sl, di).astype(x.dtype)
+    gate = jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y * gate, p["out_norm"]["scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(state["conv"].dtype), "ssm": ssm.astype(state["ssm"].dtype)}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    di, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype),
+    }

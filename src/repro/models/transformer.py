@@ -1,0 +1,215 @@
+"""The layer stack: pattern-periodic scan with per-kind layer dispatch.
+
+The model is n_periods repetitions of cfg.layer_pattern; parameters are
+stacked with a leading (n_periods,) axis and the runtime scans over
+repetitions (python loop over the pattern inside the body).  HLO size is
+O(|pattern|), not O(n_layers) — what keeps 512-device compiles fast — and
+scanned remat keeps train memory at one period of activations.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import dense_ffn, init_dense_ffn
+from repro.utils import sharding as shd
+
+
+# --------------------------------------------------------------- layer init
+def init_layer(cfg: ModelConfig, spec: LayerSpec, key: jax.Array) -> dict:
+    k_attn, k_cross, k_ffn = jax.random.split(key, 3)
+    p: dict[str, Any] = {}
+    if spec.kind == "mamba":
+        p["mixer"] = ssm_mod.init_mamba(cfg, k_attn)
+    elif spec.kind == "cross_attn":
+        p["mixer"] = attn.init_attention(cfg, k_attn, cross=True)
+    else:  # attn | attn_cross
+        if cfg.mla is not None:
+            p["mixer"] = attn.init_mla(cfg, k_attn)
+        else:
+            p["mixer"] = attn.init_attention(cfg, k_attn)
+        if spec.kind == "attn_cross":
+            p["cross"] = attn.init_attention(cfg, k_cross)
+    if spec.ffn == "dense":
+        p["ffn"] = init_dense_ffn(cfg, k_ffn, cfg.d_model, cfg.d_ff)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(cfg, k_ffn)
+    return p
+
+
+# -------------------------------------------------------------- layer apply
+def apply_layer(
+    x: jax.Array,
+    p: dict,
+    *,
+    spec: LayerSpec,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: dict | None = None,
+    ctx_embeds: jax.Array | None = None,
+    causal: bool = True,
+) -> tuple[jax.Array, dict | None, jax.Array]:
+    """One pattern layer.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    rs = jnp.asarray(cfg.residual_scale, x.dtype) if cfg.residual_scale != 1.0 else None
+
+    def add_resid(x, delta):
+        return x + (delta * rs if rs is not None else delta)
+
+    new_cache: dict = {}
+    if spec.kind == "mamba":
+        delta, st = ssm_mod.mamba_block(x, p["mixer"], cfg, cache)
+        if st is not None:
+            new_cache.update(st)
+        x = add_resid(x, delta)
+    elif spec.kind == "cross_attn":
+        delta, cc = attn.cross_attention(
+            x, p["mixer"], cfg, ctx_embeds, cache, gated=True
+        )
+        if cc is not None:
+            new_cache.update(cc)
+        x = add_resid(x, delta)
+    else:
+        self_cache = (
+            {k: v for k, v in cache.items() if k in ("k", "v", "c_kv", "k_pe")}
+            if cache is not None
+            else None
+        )
+        if cfg.mla is not None:
+            delta, sc = attn.mla_attention(x, p["mixer"], cfg, positions, self_cache)
+        else:
+            delta, sc = attn.self_attention(
+                x, p["mixer"], cfg, positions, self_cache, causal=causal
+            )
+        if sc is not None:
+            new_cache.update(sc)
+        x = add_resid(x, delta)
+        if spec.kind == "attn_cross":
+            cross_cache = (
+                {k: v for k, v in cache.items() if k in ("ck", "cv")}
+                if cache is not None
+                else None
+            )
+            delta, cc = attn.cross_attention(x, p["cross"], cfg, ctx_embeds, cross_cache)
+            if cc is not None:
+                new_cache.update(cc)
+            x = add_resid(x, delta)
+
+    if spec.ffn == "dense":
+        x = add_resid(x, dense_ffn(x, p["ffn"], cfg))
+    elif spec.ffn == "moe":
+        if cfg.moe_impl == "a2a":
+            from repro.models.moe_a2a import moe_ffn_a2a
+
+            delta, aux = moe_ffn_a2a(x, p["ffn"], cfg)
+        else:
+            delta, aux = moe_mod.moe_ffn(x, p["ffn"], cfg)
+        x = add_resid(x, delta)
+    x = shd.constrain_resid(x)
+    return x, (new_cache or None), aux
+
+
+# -------------------------------------------------------------------- stack
+def init_stack(cfg: ModelConfig, key: jax.Array, pattern=None, n_layers=None) -> dict:
+    pattern = pattern or cfg.layer_pattern
+    n_periods = (n_layers or cfg.n_layers) // len(pattern)
+
+    def init_period(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"l{i}": init_layer(cfg, s, ks[i]) for i, s in enumerate(pattern)}
+
+    keys = jax.random.split(key, n_periods)
+    return jax.vmap(init_period)(keys)
+
+
+def stack_forward(
+    x: jax.Array,
+    stacked: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    caches: dict | None = None,
+    ctx_embeds: jax.Array | None = None,
+    pattern=None,
+    *,
+    causal: bool = True,
+    remat: bool | None = None,
+) -> tuple[jax.Array, dict | None, jax.Array]:
+    """Scan the stack.  caches (if given) is a pytree stacked over periods.
+
+    Returns (x, new_caches, total_aux_loss).
+    """
+    pattern = pattern or cfg.layer_pattern
+    use_remat = cfg.remat if remat is None else remat
+
+    def body(carry, inp):
+        x, aux = carry
+        pp, cp = inp
+        new_caches = {}
+        for i, spec in enumerate(pattern):
+            c_i = cp[f"l{i}"] if cp is not None else None
+            layer = functools.partial(
+                apply_layer, spec=spec, cfg=cfg, positions=positions,
+                ctx_embeds=ctx_embeds, causal=causal,
+            )
+            if use_remat and caches is None:
+                # Per-LAYER remat (not per pattern-period): a hybrid period
+                # holds up to 8 layers, and rematerializing them as one unit
+                # keeps every layer's recompute residuals live at once
+                # (§Perf iteration E).
+                layer = jax.checkpoint(layer)
+            x, nc, a = layer(x, pp[f"l{i}"], cache=c_i)
+            aux = aux + a
+            if nc is not None:
+                new_caches[f"l{i}"] = nc
+        return (x, aux), (new_caches or None)
+
+    if _unroll_state.on:
+        # Python-loop unroll: every period appears in the HLO, so XLA's
+        # cost_analysis counts true trip-multiplied FLOPs/bytes/collectives
+        # (scan bodies are counted once — the roofline harness lowers L=1/L=2
+        # unrolled and extrapolates; DESIGN.md §6).
+        n_periods = jax.tree.leaves(stacked)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        ys = []
+        for i in range(n_periods):
+            pp = jax.tree.map(lambda t: t[i], stacked)
+            cp = jax.tree.map(lambda t: t[i], caches) if caches is not None else None
+            carry, y = body(carry, (pp, cp))
+            ys.append(y)
+        (x, aux) = carry
+        new_caches = (
+            jax.tree.map(lambda *ls: jnp.stack(ls), *ys) if ys[0] is not None else None
+        )
+        return x, new_caches, aux
+
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (stacked, caches)
+    )
+    return x, new_caches, aux
+
+
+class _UnrollState(threading.local):
+    on = False
+
+
+_unroll_state = _UnrollState()
+
+
+@contextlib.contextmanager
+def unrolled_stack():
+    """Context manager: python-loop the period scan (roofline counting)."""
+    prev = _unroll_state.on
+    _unroll_state.on = True
+    try:
+        yield
+    finally:
+        _unroll_state.on = prev

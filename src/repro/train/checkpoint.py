@@ -1,0 +1,127 @@
+"""Checkpoint manager: atomic saves, retention, async writer, restore.
+
+Design (what a real multi-pod deployment needs, realized host-side here):
+
+  * **Atomicity** — write to ``<dir>/step_<k>.tmp`` then rename; a crash
+    mid-save never corrupts the latest checkpoint.
+  * **Retention** — keep the newest ``keep`` checkpoints (plus pinned
+    "milestone" steps every ``keep_period``).
+  * **Async** — serialization runs on a background thread off the training
+    loop; ``wait()`` joins before the next save or at exit (matching
+    Orbax-style async semantics).
+  * **Restore** — ``latest_step()`` + ``restore(step)``; together with the
+    pure (step → batch) data pipeline this gives exact-resume fault
+    tolerance; for the FW workload any round boundary is a consistent
+    checkpoint and re-running a round is idempotent (DESIGN.md §3).
+
+Storage is .npz per host (this container is single-host); the pytree
+structure is recorded as flattened key paths, so restore does not need the
+original pytree template.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, keep_period: int = 0,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.keep_period = keep_period
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, *, metadata: dict | None = None) -> None:
+        self.wait()
+        flat = _flatten(tree)  # device_get on the caller thread (safe point)
+        meta = dict(metadata or {}, step=step)
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------------- restore
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, template: Any) -> Any:
+        self.wait()
+        path = os.path.join(self.dir, f"step_{step:09d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for p, leaf in leaves:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+            arr = np.asarray(flat[key])
+            want = np.dtype(leaf.dtype)
+            if arr.dtype.kind == "V":
+                # npz stores ml_dtypes (bfloat16 etc.) as raw void — reinterpret.
+                arr = arr.view(want)
+            elif arr.dtype != want:
+                arr = arr.astype(want)
+            out.append(arr.reshape(leaf.shape))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def metadata(self, step: int) -> dict:
+        with open(os.path.join(self.dir, f"step_{step:09d}", "meta.json")) as f:
+            return json.load(f)
+
+    # -------------------------------------------------------------------- gc
+    def _gc(self) -> None:
+        if not self.keep:
+            return
+        steps = self.steps()
+        pinned = {s for s in steps if self.keep_period and s % self.keep_period == 0}
+        nonpinned = [s for s in steps if s not in pinned]
+        for s in nonpinned[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)

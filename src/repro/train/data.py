@@ -1,0 +1,68 @@
+"""Synthetic data pipeline: deterministic, seeded, shard-aware token streams.
+
+Real deployments plug a tokenized corpus in here; the framework contract is
+the iterator protocol + deterministic resume (step → batch is a pure
+function, so restoring a checkpoint at step k reproduces the exact stream —
+no data-state checkpointing needed).
+
+The generator is Zipf-ish over the vocab (heavy-head like natural text) with
+a deterministic per-(step, shard) fold-in, and emits next-token labels.
+Modality stubs (image_embeds / frames) are seeded the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+
+
+def batch_at_step(
+    cfg: ModelConfig, dcfg: DataConfig, step: int, *, np_rng: bool = True
+) -> dict:
+    """Pure function (config, step) → batch dict (host numpy)."""
+    rng = np.random.default_rng(np.random.SeedSequence([dcfg.seed, step]))
+    b, s = dcfg.global_batch, dcfg.seq_len
+    # Zipf over the *real* vocab (padded ids never appear — DESIGN.md §6).
+    z = rng.zipf(dcfg.zipf_a, size=(b, s + 1)).astype(np.int64)
+    tokens = (z - 1) % cfg.vocab_size
+    out = {
+        "tokens": tokens[:, :s].astype(np.int32),
+        "labels": tokens[:, 1:].astype(np.int32),
+    }
+    if cfg.family == "vlm":
+        out["image_embeds"] = rng.standard_normal(
+            (b, cfg.n_image_tokens, cfg.d_model), dtype=np.float32
+        ).astype(jnp.bfloat16) * 0.02
+    if cfg.encoder is not None:
+        out["frames"] = rng.standard_normal(
+            (b, cfg.encoder.n_frames, cfg.d_model), dtype=np.float32
+        ).astype(jnp.bfloat16) * 0.02
+    return out
+
+
+class DataIterator:
+    """Stateful wrapper with deterministic resume: iterator(step0).__next__()
+    yields batches for step0, step0+1, ..."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig, start_step: int = 0):
+        self.cfg, self.dcfg, self.step = cfg, dcfg, start_step
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> dict:
+        batch = batch_at_step(self.cfg, self.dcfg, self.step)
+        self.step += 1
+        return batch

@@ -1,0 +1,99 @@
+"""AdamW with WSD / cosine / linear schedules, gradient clipping, and an
+optional bf16-moment mode (the memory option that makes kimi-k2-scale
+training fit — see EXPERIMENTS.md capacity notes).
+
+Self-contained (no optax dependency): state is a pytree
+{"m": ..., "v": ..., "step": ()} sharded like the parameters, so FSDP
+sharding of params automatically ZeRO-shards the moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "wsd"  # wsd | cosine | linear | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    # WSD (MiniCPM): stable phase ends at decay_start, then exponential-ish
+    # decay to lr_min over the tail.
+    decay_start_frac: float = 0.9
+    lr_min_frac: float = 0.1
+    state_dtype: str = "float32"  # "bfloat16" halves optimizer HBM
+
+
+def schedule_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(s / cfg.total_steps, 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        base = cfg.lr_min_frac + (1 - cfg.lr_min_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+    elif cfg.schedule == "linear":
+        base = 1.0 - (1 - cfg.lr_min_frac) * t
+    elif cfg.schedule == "wsd":
+        # Warmup-Stable-Decay: flat until decay_start_frac, then linear decay
+        # (MiniCPM uses this to allow continual pretraining from the stable
+        # phase).
+        decay_t = jnp.clip(
+            (t - cfg.decay_start_frac) / max(1e-6, 1 - cfg.decay_start_frac), 0.0, 1.0
+        )
+        base = 1.0 - (1 - cfg.lr_min_frac) * decay_t
+    else:
+        base = jnp.float32(1.0)
+    return cfg.lr * warm * base
+
+
+def init_state(cfg: OptimizerConfig, params) -> dict:
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def apply_updates(
+    cfg: OptimizerConfig, params, grads, state
+) -> tuple[dict, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    b1, b2 = cfg.betas
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,179 @@
+"""Jitted train step builder: loss, microbatched grad accumulation, AdamW,
+and the full FSDP+TP+SP sharding assignment (DESIGN.md §6).
+
+``param_pspecs`` is the single source of truth mapping parameter path →
+PartitionSpec; optimizer moments inherit it (ZeRO for free).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward_train, init_params
+from repro.train import optimizer as opt_mod
+from repro.utils import sharding as shd
+
+
+def mesh_axes(mesh: Mesh) -> shd.AxisCtx:
+    names = tuple(mesh.axis_names)
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return shd.AxisCtx(
+        dp=dp or (names[0],),
+        tp="model" if "model" in names else names[-1],
+        mesh=mesh,
+    )
+
+
+# ----------------------------------------------------------- param shardings
+_TP_LAST = {  # (D, X) matrices: X column-parallel over tp, D over fsdp
+    "wq", "wk", "wv", "w1", "w3", "ws1", "ws3", "wz", "wx", "wb", "wc", "wdt",
+    "w_uk", "w_uv", "w_uq", "lm_head",
+}
+_TP_FIRST = {"wo", "w2", "ws2", "out_proj"}  # (X, D): row-parallel
+_FSDP_ONLY_LAST = {"router", "w_dkv", "w_dq", "w_kpe"}  # (D, small): replicate out
+_TP_BIAS = {"bq", "bk", "bv", "b1", "conv_b"}
+
+
+def pspec_for(path_keys: tuple[str, ...], shape: tuple[int, ...],
+              fsdp, tp: str) -> P:
+    """PartitionSpec for one parameter leaf (period-stacked dims handled)."""
+    name = path_keys[-1]
+    stacked = "periods" in path_keys
+    lead = (None,) if stacked else ()
+    dims = shape[1:] if stacked else shape
+
+    def spec(*s):
+        return P(*(lead + s))
+
+    if name == "embed":
+        return P(tp, fsdp)  # (vocab, d_model) — never period-stacked
+    if name in _TP_LAST and len(dims) == 2:
+        return spec(fsdp, tp)
+    if name in ("w1", "w3") and len(dims) == 3:  # (E, D, Fe) routed experts
+        return spec(tp, fsdp, None)
+    if name == "w2" and len(dims) == 3:  # (E, Fe, D)
+        return spec(tp, None, fsdp)
+    if name in _TP_FIRST and len(dims) == 2:
+        return spec(tp, fsdp)
+    if name in _FSDP_ONLY_LAST and len(dims) == 2:
+        return spec(fsdp, None)
+    if name == "conv_w":
+        return spec(None, tp)
+    if name in _TP_BIAS and len(dims) == 1:
+        return spec(tp)
+    return spec(*(None,) * len(dims))
+
+
+def param_pspecs(cfg: ModelConfig, params_shapes: Any, mesh: Mesh) -> Any:
+    axes = mesh_axes(mesh)
+    fsdp = axes.dp_spec
+
+    def one(path, leaf):
+        keys = tuple(str(getattr(p, "key", "")) for p in path)
+        return pspec_for(keys, leaf.shape, fsdp, axes.tp)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_pspecs(pspecs: Any) -> dict:
+    return {"m": pspecs, "v": pspecs, "step": P()}
+
+
+# ------------------------------------------------------------------- loss
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits (B,S,V) f32 (vocab-sharded ok — reductions lower to psums)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return (lse - ll).mean()
+
+
+def loss_fn(cfg: ModelConfig, params: Any, batch: dict) -> tuple[jax.Array, dict]:
+    logits, aux = forward_train(cfg, params, batch)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# -------------------------------------------------------------- train step
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_mod.OptimizerConfig, mesh: Mesh):
+    """Returns (train_step, in_shardings, out_shardings) — caller jits."""
+    axes = mesh_axes(mesh)
+    shapes = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    pspecs = param_pspecs(cfg, shapes, mesh)
+
+    def _pin_grads(grads):
+        # Keep gradients FSDP-sharded like their parameters.  Without this
+        # GSPMD materializes *full* f32 gradients per chip (all-gather of
+        # every weight-shaped cotangent — ~10 GB/layer on qwen2-72b,
+        # EXPERIMENTS.md §Perf iteration A).
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, pspecs
+        )
+
+    def train_step(params, opt_state, batch):
+        with shd.axis_ctx(axes):
+            accum = cfg.grad_accum
+            if accum > 1:
+                # Microbatched gradient accumulation (f32 accumulators).
+                def micro(c, mb):
+                    (l, m), g = jax.value_and_grad(
+                        functools.partial(loss_fn, cfg), has_aux=True
+                    )(params, mb)
+                    g = _pin_grads(g)
+                    gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), c[0], g)
+                    return (gsum, c[1] + l), None
+
+                mbs = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                    batch,
+                )
+                zero_g = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                (gsum, lsum), _ = jax.lax.scan(micro, (zero_g, 0.0), mbs)
+                grads = jax.tree.map(lambda g: g / accum, gsum)
+                loss = lsum / accum
+                metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    functools.partial(loss_fn, cfg), has_aux=True
+                )(params, batch)
+                grads = _pin_grads(grads)
+            params, opt_state, opt_metrics = opt_mod.apply_updates(
+                opt_cfg, params, grads, opt_state
+            )
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    ns = lambda spec: NamedSharding(mesh, spec)
+    param_sh = jax.tree.map(ns, pspecs)
+    opt_sh = {
+        "m": param_sh,
+        "v": param_sh,
+        "step": ns(P()),
+    }
+    batch_spec = {
+        "tokens": ns(P(axes.dp_spec, None)),
+        "labels": ns(P(axes.dp_spec, None)),
+    }
+    if cfg.family == "vlm":
+        batch_spec["image_embeds"] = ns(P(axes.dp_spec, None, None))
+    if cfg.encoder is not None:
+        batch_spec["frames"] = ns(P(axes.dp_spec, None, None))
+    metric_sh = ns(P())
+    in_sh = (param_sh, opt_sh, batch_spec)
+    out_sh = (
+        param_sh,
+        opt_sh,
+        {k: metric_sh for k in ("loss", "ce", "aux", "lr", "grad_norm")},
+    )
+    return train_step, in_sh, out_sh
+
+
+def init_all(cfg: ModelConfig, opt_cfg: opt_mod.OptimizerConfig, key) -> tuple:
+    params = init_params(cfg, key)
+    opt_state = opt_mod.init_state(opt_cfg, params)
+    return params, opt_state

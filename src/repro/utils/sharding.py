@@ -1,0 +1,108 @@
+"""Sharding context: logical activation shardings without threading a mesh
+through every model function.
+
+The train/serve step builders install an ``AxisCtx`` (which physical mesh
+axes play the DP/TP roles); model code calls ``constrain_*`` helpers that
+no-op when no context is installed (single-device tests) and apply
+``with_sharding_constraint`` under jit when it is.
+
+Logical layout (DESIGN.md §6):
+  residual stream (B,S,D)  → P(dp, tp, None)      # Megatron-SP: seq over tp
+  attention inner (B,S,H*) → propagated by GSPMD from flat-dim param shards
+  logits (B,S,V)           → P(dp, None, tp)       # vocab col-parallel
+  kv cache (B,S,...)       → P(dp, tp, ...)        # seq-sharded → split-K decode
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisCtx:
+    dp: tuple[str, ...]  # e.g. ("pod", "data") or ("data",)
+    tp: str = "model"
+    mesh: object = None  # concrete Mesh, required by shard_map-based paths
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+
+def current() -> AxisCtx | None:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_ctx(ctx: AxisCtx | None):
+    prev = current()
+    _state.ctx = ctx
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _constrain(x, spec: P):
+    ctx = current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_resid(x):
+    """(B, S, D) residual stream — batch over DP, sequence over TP (SP)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return _constrain(x, P(ctx.dp_spec, ctx.tp, None))
+
+
+def constrain_batch_only(x):
+    """(B, ...) — batch over DP, rest replicated/propagated."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return _constrain(x, P(*((ctx.dp_spec,) + (None,) * (x.ndim - 1))))
+
+
+def constrain_logits(x):
+    """(B, S, V) — vocab column-parallel."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return _constrain(x, P(ctx.dp_spec, None, ctx.tp))
+
+
+def constrain_moe_buffer(x, n_experts: int):
+    """(B, E, C, D) dispatch buffer — batch over DP, experts over TP (EP)
+    when divisible; otherwise batch-only (tiny smoke configs)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    espec = ctx.tp if n_experts % _axis_size(ctx.tp) == 0 else None
+    return _constrain(x, P(ctx.dp_spec, espec, None, None))
+
+
+def _axis_size(name: str) -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    try:
+        return dict(mesh.shape)[name]
+    except Exception:
+        return 1
+
+
+def constrain_kv_cache(x):
+    """(B, S, ...) caches — sequence-sharded over TP (split-K decode)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = (ctx.dp_spec, ctx.tp) + (None,) * (x.ndim - 2)
+    return _constrain(x, P(*spec))

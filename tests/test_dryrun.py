@@ -1,0 +1,46 @@
+"""Dry-run integration tests (subprocess — needs its own XLA device count).
+
+Runs a subset of real cells on the true 512-device production meshes; the
+full 40-cell × 2-mesh sweep is experiments/dryrun (EXPERIMENTS.md §Dry-run).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dryrun(arch, shape, mesh, tmp):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", mesh, "--out", str(tmp), "--no-roofline"],
+        capture_output=True, text=True, timeout=580, env=env, cwd=REPO,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout[-3000:]}\nstderr:\n{res.stderr[-3000:]}"
+    return res.stdout
+
+
+def test_dryrun_train_single_pod(tmp_path):
+    out = run_dryrun("qwen1.5-0.5b", "train_4k", "single", tmp_path)
+    assert "all cells passed" in out
+    rec = json.load(open(tmp_path / "qwen1.5-0.5b__train_4k__single.json"))
+    assert rec["fits_v5e_16gb"]
+    assert rec["argument_bytes_per_dev"] > 0
+
+
+def test_dryrun_decode_multi_pod(tmp_path):
+    out = run_dryrun("qwen1.5-0.5b", "decode_32k", "multi", tmp_path)
+    assert "all cells passed" in out
+    rec = json.load(open(tmp_path / "qwen1.5-0.5b__decode_32k__multi.json"))
+    assert rec["mesh"] == "pod2x16x16"
+
+
+def test_dryrun_ssm_long_context(tmp_path):
+    out = run_dryrun("mamba2-780m", "long_500k", "single", tmp_path)
+    assert "all cells passed" in out

@@ -1,0 +1,59 @@
+"""Flash-decode kernel allclose sweeps vs the jnp oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ref import flash_decode_ref
+
+
+def mk(b, s, hkv, g, hd, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, hkv, g, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,hkv,g,hd", [
+    (2, 512, 2, 4, 64), (1, 1024, 4, 1, 128), (2, 256, 1, 8, 64),
+])
+def test_flash_decode_full_cache(b, s, hkv, g, hd):
+    q, k, v = mk(b, s, hkv, g, hd, seed=s)
+    want = flash_decode_ref(q, k, v, jnp.int32(s))
+    got = flash_decode(q, k, v, jnp.int32(s), bs=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kv_len", [1, 100, 255, 256, 300, 511])
+def test_flash_decode_masking(kv_len):
+    """Positions beyond kv_len must not influence the result."""
+    q, k, v = mk(1, 512, 2, 2, 64, seed=kv_len)
+    want = flash_decode_ref(q, k, v, jnp.int32(kv_len))
+    got = flash_decode(q, k, v, jnp.int32(kv_len), bs=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # Poison the masked region: output must be unchanged.
+    k2 = k.at[:, kv_len:].set(99.0)
+    v2 = v.at[:, kv_len:].set(-99.0)
+    got2 = flash_decode(q, k2, v2, jnp.int32(kv_len), bs=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(got),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_flash_decode_block_size_invariance():
+    q, k, v = mk(1, 512, 2, 2, 64, seed=7)
+    outs = [np.asarray(flash_decode(q, k, v, jnp.int32(300), bs=bs, interpret=True))
+            for bs in (64, 128, 256, 512)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-6, atol=1e-6)
+
+
+def test_flash_decode_bf16():
+    q, k, v = mk(1, 256, 2, 2, 64, seed=9, dtype=jnp.bfloat16)
+    want = flash_decode_ref(q, k, v, jnp.int32(256))
+    got = flash_decode(q, k, v, jnp.int32(256), bs=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-2, atol=2e-2)

@@ -1,0 +1,147 @@
+"""Floyd-Warshall reference-algorithm correctness + APSP invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fw_blocked, fw_naive, fw_numpy, fw_staged
+from repro.core.graph import grid_graph, pad_to_multiple, random_digraph, ring_graph
+from repro.core.paths import extract_path, fw_with_successors
+
+
+def python_fw(w):
+    """The most literal O(n^3) triple loop — the ultimate oracle."""
+    w = np.array(w, copy=True).astype(np.float64)
+    n = w.shape[0]
+    for k in range(n):
+        for i in range(n):
+            for j in range(n):
+                if w[i, k] + w[k, j] < w[i, j]:
+                    w[i, j] = w[i, k] + w[k, j]
+    return w
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 24])
+def test_naive_matches_python_oracle(n):
+    w = random_digraph(n, density=0.6, seed=n)
+    got = np.asarray(fw_naive(jnp.asarray(w)))
+    np.testing.assert_allclose(got, python_fw(w), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,bs", [(16, 4), (32, 8), (64, 16), (64, 32), (128, 32)])
+def test_blocked_matches_naive(n, bs):
+    w = random_digraph(n, density=0.5, seed=n + bs)
+    ref = fw_naive(jnp.asarray(w))
+    got = fw_blocked(jnp.asarray(w), block_size=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+
+
+def test_numpy_matches_python_oracle():
+    w = random_digraph(12, density=0.7, seed=3)
+    np.testing.assert_allclose(fw_numpy(w), python_fw(w), rtol=1e-5)
+
+
+def test_ring_graph_known_distances():
+    n = 16
+    d = np.asarray(fw_naive(jnp.asarray(ring_graph(n))))
+    for i in range(n):
+        for j in range(n):
+            assert d[i, j] == (j - i) % n
+
+
+def test_grid_graph_manhattan():
+    side = 4
+    d = np.asarray(fw_naive(jnp.asarray(grid_graph(side))))
+    for r1 in range(side):
+        for c1 in range(side):
+            for r2 in range(side):
+                for c2 in range(side):
+                    assert d[r1 * side + c1, r2 * side + c2] == abs(r1 - r2) + abs(c1 - c2)
+
+
+def test_padding_is_transparent():
+    w = random_digraph(37, density=0.5, seed=9)
+    padded, n = pad_to_multiple(w, 16)
+    assert padded.shape == (48, 48)
+    ref = np.asarray(fw_naive(jnp.asarray(w)))
+    got = np.asarray(fw_naive(jnp.asarray(padded)))[:n, :n]
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_negative_edges_no_negative_cycle():
+    w = random_digraph(20, seed=5, allow_negative=True)
+    assert (w < 0).any(), "generator should produce some negative edges"
+    got = np.asarray(fw_naive(jnp.asarray(w)))
+    np.testing.assert_allclose(got, python_fw(w), rtol=1e-4)
+    assert (np.diagonal(got) >= 0).all()
+
+
+# ---------------------------------------------------------------- properties
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    density=st.floats(min_value=0.2, max_value=1.0),
+)
+def test_property_triangle_inequality(n, seed, density):
+    """d[i,j] <= d[i,k] + d[k,j] for all triples — the fixed-point law."""
+    w = random_digraph(n, density=density, seed=seed)
+    d = np.asarray(fw_naive(jnp.asarray(w)))
+    rhs = d[:, :, None] + d[None, :, :]      # [i,k,j] = d[i,k] + d[k,j]
+    assert (d <= rhs.min(axis=1) + 1e-4).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_idempotence(n, seed):
+    """Running FW on its own output is a no-op (monotone fixed point)."""
+    w = random_digraph(n, density=0.5, seed=seed)
+    d1 = fw_naive(jnp.asarray(w))
+    d2 = fw_naive(d1)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_property_dominated_by_edges(n, seed):
+    """d <= w elementwise and diag(d) == 0 for nonneg graphs."""
+    w = random_digraph(n, density=0.7, seed=seed)
+    d = np.asarray(fw_naive(jnp.asarray(w)))
+    assert (d <= w + 1e-5).all()
+    np.testing.assert_allclose(np.diagonal(d), 0.0, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=8, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    bs=st.sampled_from([4, 8]),
+)
+def test_property_blocked_equals_naive(n, seed, bs):
+    w, _ = pad_to_multiple(random_digraph(n, density=0.5, seed=seed), bs)
+    ref = fw_naive(jnp.asarray(w))
+    got = fw_blocked(jnp.asarray(w), block_size=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5)
+
+
+# ------------------------------------------------------------------- paths
+def test_successor_paths_are_shortest():
+    w = random_digraph(24, density=0.4, seed=11)
+    d, succ = fw_with_successors(jnp.asarray(w))
+    d, succ = np.asarray(d), np.asarray(succ)
+    for src in range(0, 24, 5):
+        for dst in range(0, 24, 7):
+            path = extract_path(succ, src, dst)
+            if not np.isfinite(d[src, dst]):
+                assert path == [] or src == dst
+                continue
+            assert path[0] == src and path[-1] == dst
+            total = sum(w[a, b] for a, b in zip(path, path[1:]))
+            np.testing.assert_allclose(total, d[src, dst], rtol=1e-5)

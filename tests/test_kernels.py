@@ -1,0 +1,178 @@
+"""Pallas kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Every kernel is swept over shapes, dtypes, block parameters, inner-loop
+variants, and semirings.  Tolerances: tropical semirings are exact min/add
+chains (no long float accumulation), so fp32 comparisons are tight; bf16
+gets a looser bound from rounding of the adds.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.semiring import MAX_MIN, MAX_PLUS, MIN_PLUS, OR_AND, PLUS_MUL
+from repro.kernels import ref
+from repro.kernels.fw_phase1 import fw_phase1
+from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
+from repro.kernels.minplus_matmul import semiring_matmul
+from repro.kernels.ops import fw_phase3, minplus_matmul, transitive_closure
+
+I = True  # interpret mode — kernels run on CPU in this container
+
+
+def rand(shape, dtype=jnp.float32, seed=0, lo=0.0, hi=10.0, inf_frac=0.0):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(lo, hi, shape).astype(np.float32)
+    if inf_frac:
+        x = np.where(rng.uniform(size=shape) < inf_frac, np.inf, x)
+    return jnp.asarray(x, dtype=dtype)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------ semiring matmul sweep
+@pytest.mark.parametrize("m,k,n", [(64, 64, 64), (128, 32, 64), (64, 128, 256), (256, 256, 128)])
+@pytest.mark.parametrize("bm,bn,bk", [(64, 64, 32), (32, 64, 8), (64, 128, 16)])
+def test_minplus_matmul_shapes(m, k, n, bm, bn, bk):
+    if m % bm or n % bn or k % bk:
+        pytest.skip("non-divisible combo")
+    a, b = rand((m, k), seed=1), rand((k, n), seed=2)
+    want = ref.semiring_matmul_ref(a, b)
+    got = semiring_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(jnp.float32))
+
+
+@pytest.mark.parametrize("variant", ["fori", "unroll", "broadcast"])
+def test_minplus_matmul_variants(variant):
+    a, b = rand((128, 64), seed=3), rand((64, 128), seed=4)
+    want = ref.semiring_matmul_ref(a, b)
+    got = semiring_matmul(a, b, bm=64, bn=64, bk=16, variant=variant, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(jnp.float32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_minplus_matmul_dtypes(dtype):
+    a, b = rand((64, 64), dtype, seed=5), rand((64, 64), dtype, seed=6)
+    want = ref.semiring_matmul_ref(a, b)
+    got = semiring_matmul(a, b, bm=32, bn=32, bk=16, interpret=I)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+def test_minplus_matmul_with_inf():
+    a = rand((64, 64), seed=7, inf_frac=0.3)
+    b = rand((64, 64), seed=8, inf_frac=0.3)
+    want = ref.semiring_matmul_ref(a, b)
+    got = semiring_matmul(a, b, bm=32, bn=32, bk=32, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_fused_accumulator():
+    a, b, c = rand((64, 32), seed=9), rand((32, 64), seed=10), rand((64, 64), seed=11, hi=3.0)
+    want = ref.semiring_matmul_ref(a, b, c)
+    got = semiring_matmul(a, b, c, bm=32, bn=32, bk=8, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("sr", [MIN_PLUS, MAX_PLUS, MAX_MIN, OR_AND])
+def test_semiring_generality(sr):
+    if sr is OR_AND:
+        rng = np.random.default_rng(12)
+        a = jnp.asarray((rng.uniform(size=(64, 64)) < 0.2).astype(np.float32))
+        b = jnp.asarray((rng.uniform(size=(64, 64)) < 0.2).astype(np.float32))
+    else:
+        a, b = rand((64, 64), seed=13), rand((64, 64), seed=14)
+    want = ref.semiring_matmul_ref(a, b, semiring=sr)
+    got = semiring_matmul(a, b, semiring=sr, bm=32, bn=32, bk=16, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_plus_mul_matches_dot():
+    a, b = rand((64, 64), seed=15, hi=1.0), rand((64, 64), seed=16, hi=1.0)
+    got = semiring_matmul(a, b, semiring=PLUS_MUL, bm=32, bn=32, bk=16, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b), rtol=1e-5, atol=1e-5)
+
+
+def test_staging_depth_invariance():
+    """The staged result must not depend on the staging depth bk (paper §4.2)."""
+    a, b, c = rand((128, 128), seed=17), rand((128, 128), seed=18), rand((128, 128), seed=19)
+    outs = [
+        np.asarray(semiring_matmul(a, b, c, bm=64, bn=64, bk=bk, interpret=I))
+        for bk in (8, 16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+# ------------------------------------------------------------------- phase 1
+@pytest.mark.parametrize("s", [8, 32, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_phase1(s, dtype):
+    t = rand((s, s), dtype, seed=s, inf_frac=0.2)
+    t = t.at[jnp.arange(s), jnp.arange(s)].set(0.0)
+    want = ref.fw_phase1_ref(t)
+    got = fw_phase1(t, interpret=I)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol(dtype)
+    )
+
+
+# ------------------------------------------------------------------- phase 2
+@pytest.mark.parametrize("s,n,bt", [(32, 128, 64), (64, 256, 128), (128, 128, 128)])
+def test_phase2_row(s, n, bt):
+    diag = ref.fw_phase1_ref(rand((s, s), seed=20 + s, inf_frac=0.1))
+    band = rand((s, n), seed=21 + s, inf_frac=0.1)
+    want = ref.fw_phase2_row_ref(diag, band)
+    got = fw_phase2_row(diag, band, bt=bt, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("s,n,bt", [(32, 128, 64), (64, 256, 128), (128, 128, 128)])
+def test_phase2_col(s, n, bt):
+    diag = ref.fw_phase1_ref(rand((s, s), seed=22 + s, inf_frac=0.1))
+    band = rand((n, s), seed=23 + s, inf_frac=0.1)
+    want = ref.fw_phase2_col_ref(diag, band)
+    got = fw_phase2_col(diag, band, bt=bt, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------------- phase 3
+def test_phase3_wrapper():
+    n, s = 256, 64
+    w = rand((n, n), seed=24)
+    cb, rb = rand((n, s), seed=25), rand((s, n), seed=26)
+    want = ref.fw_phase3_ref(w, cb, rb)
+    got = fw_phase3(w, cb, rb, bm=128, bn=128, bk=16, interpret=I)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------- end-to-end staged FW
+@pytest.mark.parametrize("n,s", [(128, 32), (256, 64), (256, 128)])
+def test_staged_fw_matches_naive(n, s):
+    from repro.core import fw_naive, fw_staged
+    from repro.core.graph import random_digraph
+
+    w = jnp.asarray(random_digraph(n, density=0.3, seed=n))
+    want = fw_naive(w)
+    got = fw_staged(w, block_size=s, bm=min(128, n), bn=min(128, n), bk=min(32, s), interpret=I)
+    # Blocked FW associates the same path sums differently → 1-ulp drift.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_transitive_closure():
+    rng = np.random.default_rng(0)
+    n = 128
+    adj = (rng.uniform(size=(n, n)) < 0.02).astype(np.float32)
+    np.fill_diagonal(adj, 1.0)
+    got = np.asarray(transitive_closure(jnp.asarray(adj), interpret=I))
+    # Oracle: boolean matrix powers to fixed point.
+    reach = adj.astype(bool)
+    for _ in range(n):
+        new = reach | (reach @ reach)
+        if (new == reach).all():
+            break
+        reach = new
+    np.testing.assert_array_equal(got > 0.5, reach)

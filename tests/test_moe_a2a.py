@@ -1,0 +1,18 @@
+"""a2a-MoE correctness (subprocess — needs its own device count)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_a2a_matches_dense_dispatch():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.moe_a2a_check", "--devices", "8"],
+        capture_output=True, text=True, timeout=580, env=env, cwd=REPO,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-2000:]}"
+    assert "OK" in res.stdout

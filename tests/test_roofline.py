@@ -1,0 +1,83 @@
+"""Units for the roofline machinery: HLO collective parser, trip-count
+extrapolation, term arithmetic, and the model-FLOPs decomposition."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import roofline as rl
+from repro.models.model import flops_param_groups, model_flops
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[16,512]{1,0} parameter(0)
+  %ag = bf16[256,512]{1,0} all-gather(bf16[16,512]{1,0} %p0), dimensions={0}
+  %ar = f32[128,128]{1,0} all-reduce(f32[128,128]{1,0} %x), to_apply=%sum
+  %rs = f32[8,64]{1,0} reduce-scatter(f32[128,64]{1,0} %y), dimensions={0}
+  %cp = bf16[32]{0} collective-permute(bf16[32]{0} %z)
+  %ags = bf16[64,8]{1,0} all-gather-start(bf16[4,8]{1,0} %w), dimensions={0}
+  %agd = bf16[64,8]{1,0} all-gather-done(bf16[64,8]{1,0} %ags)
+  %dot = f32[16,16]{1,0} dot(f32[16,8]{1,0} %a, f32[8,16]{1,0} %b)
+}
+"""
+
+
+def test_parse_collective_bytes_kinds_and_sizes():
+    got = rl.parse_collective_bytes(HLO)
+    assert got["all-gather"] == 16 * 512 * 2 + 4 * 8 * 2  # operand shards
+    assert got["all-reduce"] == 128 * 128 * 4
+    assert got["reduce-scatter"] == 128 * 64 * 4
+    assert got["collective-permute"] == 32 * 2
+    # -done ops and plain dots must not be counted
+    assert sum(got.values()) < 600_000
+
+
+def test_parse_fallback_to_result_shape():
+    txt = "%ag = bf16[256,512]{1,0} all-gather(%p0), dimensions={0}\n"
+    got = rl.parse_collective_bytes(txt)
+    assert got["all-gather"] == 256 * 512 * 2
+
+
+def test_extrapolate_linearity():
+    # F(1)=10 (fixed 4 + body 6), F(2)=16 → F(5) = 4 + 5·6 = 34
+    assert rl.extrapolate(10.0, 16.0, 5) == 34.0
+    assert rl.extrapolate(10.0, 16.0, 1) == 10.0
+
+
+def test_roofline_terms_bottleneck_and_fraction():
+    t = rl.RooflineTerms(
+        flops=rl.PEAK_FLOPS_BF16,       # 1 s compute
+        bytes_hbm=rl.HBM_BW * 2,        # 2 s memory  ← dominant
+        coll_bytes=rl.ICI_LINK_BW * 0.5,
+        chips=4,
+        model_flops=rl.PEAK_FLOPS_BF16 * 4,  # = compiled flops (useful=1)
+    )
+    assert t.bottleneck == "memory"
+    assert t.t_memory == pytest.approx(2.0)
+    assert t.useful_ratio == pytest.approx(1.0)
+    # perfect-useful flops but memory-bound at 2 s → frac = 0.5
+    assert t.roofline_fraction == pytest.approx(0.5)
+
+
+def test_flops_param_groups_decomposition():
+    cfg = get_config("whisper-small")
+    g = flops_param_groups(cfg)
+    assert g["head"] == cfg.d_model * cfg.vocab_padded
+    assert g["enc"] > 0  # whisper has an encoder stack
+    assert g["body"] > g["enc"] > 0
+
+
+def test_model_flops_kinds_ordering():
+    cfg = get_config("qwen1.5-0.5b")
+    train = model_flops(cfg, kind="train", global_batch=8, seq_len=128)
+    prefill = model_flops(cfg, kind="prefill", global_batch=8, seq_len=128)
+    decode = model_flops(cfg, kind="decode", global_batch=8, seq_len=128)
+    assert train > 2.9 * prefill  # 6N·D vs 2N·D (head positions differ)
+    # full sequence vs one token (head flops equal: last-position only)
+    assert prefill > 50 * decode
+
+
+def test_moe_active_flops_scale():
+    cfg = get_config("kimi-k2-1t-a32b")
+    dense_equiv = model_flops(cfg, kind="prefill", global_batch=1, seq_len=1024)
+    # active ≈ 32B params → 2·32e9·1024 ≈ 6.6e13, far below total-param flops
+    assert 4e13 < dense_equiv < 9e13

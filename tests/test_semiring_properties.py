@@ -1,0 +1,77 @@
+"""Algebraic property tests (hypothesis): the semiring laws the staged
+kernel's correctness rests on — associativity/commutativity of ⊕,
+distributivity of ⊗ over ⊕, identities, and annihilation.  If any of these
+failed for a semiring, blocked/staged FW would not equal naive FW."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.semiring import MAX_MIN, MAX_PLUS, MIN_PLUS, OR_AND, SEMIRINGS
+
+finite = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                   allow_infinity=False, width=32)
+boolish = st.sampled_from([0.0, 1.0])
+
+
+def _vals(sr):
+    return boolish if sr is OR_AND else finite
+
+
+@pytest.mark.parametrize("sr", [MIN_PLUS, MAX_PLUS, MAX_MIN, OR_AND])
+def test_identities(sr):
+    for v in (0.0, 1.0, -3.5, 7.25):
+        if sr is OR_AND and v not in (0.0, 1.0):
+            continue
+        x = jnp.float32(v)
+        np.testing.assert_allclose(sr.add(x, jnp.float32(sr.zero)), x)
+        np.testing.assert_allclose(sr.mul(x, jnp.float32(sr.one)), x)
+        # zero annihilates ⊗ (inf + x = inf for min-plus, etc.)
+        ann = sr.mul(x, jnp.float32(sr.zero))
+        np.testing.assert_allclose(sr.add(ann, jnp.float32(sr.zero)),
+                                   jnp.float32(sr.zero))
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=finite, b=finite, c=finite,
+       name=st.sampled_from(["min_plus", "max_plus", "max_min"]))
+def test_property_add_assoc_comm(a, b, c, name):
+    sr = SEMIRINGS[name]
+    fa, fb, fc = map(jnp.float32, (a, b, c))
+    lhs = sr.add(sr.add(fa, fb), fc)
+    rhs = sr.add(fa, sr.add(fb, fc))
+    np.testing.assert_allclose(np.float32(lhs), np.float32(rhs), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.float32(sr.add(fa, fb)), np.float32(sr.add(fb, fa))
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=finite, b=finite, c=finite,
+       name=st.sampled_from(["min_plus", "max_plus", "max_min"]))
+def test_property_distributivity(a, b, c, name):
+    """a ⊗ (b ⊕ c) == (a ⊗ b) ⊕ (a ⊗ c) — what makes blocking valid."""
+    sr = SEMIRINGS[name]
+    fa, fb, fc = map(jnp.float32, (a, b, c))
+    lhs = sr.mul(fa, sr.add(fb, fc))
+    rhs = sr.add(sr.mul(fa, fb), sr.mul(fa, fc))
+    np.testing.assert_allclose(np.float32(lhs), np.float32(rhs), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       name=st.sampled_from(["min_plus", "max_plus", "max_min", "or_and"]))
+def test_property_matmul_assoc(seed, name):
+    """(A⊗B)⊗C == A⊗(B⊗C) for the semiring matmul — tile-order freedom."""
+    sr = SEMIRINGS[name]
+    rng = np.random.default_rng(seed)
+    if name == "or_and":
+        mk = lambda: jnp.asarray((rng.uniform(size=(5, 5)) < 0.4).astype(np.float32))
+    else:
+        mk = lambda: jnp.asarray(rng.uniform(-5, 5, (5, 5)).astype(np.float32))
+    a, b, c = mk(), mk(), mk()
+    lhs = sr.matmul_reference(sr.matmul_reference(a, b), c)
+    rhs = sr.matmul_reference(a, sr.matmul_reference(b, c))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4,
+                               atol=1e-4)

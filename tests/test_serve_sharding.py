@@ -1,0 +1,61 @@
+"""Units for serving shardings: weight-stationary spec dropping and cache
+pspec divisibility rules (pure functions over a host mesh)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs.base import get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.serve.engine import cache_pspecs, make_serve_fns
+from repro.models.model import init_cache
+import functools
+
+mesh = make_host_mesh(8)  # data=4, model=2
+cfg = get_smoke_config("qwen2-72b")
+
+# --- weight-stationary drops the dp axis everywhere
+fns = make_serve_fns(cfg, mesh, batch=8, max_seq=64, weight_stationary=True)
+for leaf in jax.tree_util.tree_leaves(
+    jax.tree.map(lambda s: s.spec, fns["param_sh"],
+                 is_leaf=lambda x: hasattr(x, "spec"))
+):
+    for entry in leaf:
+        names = (entry,) if isinstance(entry, str) else (entry or ())
+        assert "data" not in names and "pod" not in names, leaf
+print("WS-OK")
+
+# --- cache pspecs: divisible seq dims shard over model; odd ctx dims don't
+vlm = get_smoke_config("llama-3.2-vision-11b")  # n_image_tokens=17 (odd)
+shapes = jax.eval_shape(functools.partial(init_cache, vlm, 8, 64))
+specs = cache_pspecs(vlm, shapes, mesh, batch=8)
+flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+for path, spec in flat:
+    name = str(getattr(path[-1], "key", ""))
+    if name in ("ck", "cv"):
+        assert spec[2] is None, (name, spec)   # 17 not divisible by 2
+    if name in ("k", "v"):
+        assert spec[2] == "model", (name, spec)  # 64 divisible by 2
+print("CACHE-OK")
+"""
+
+
+def test_weight_stationary_and_cache_specs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=400, env=env, cwd=REPO,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr[-2000:]}"
+    assert "WS-OK" in res.stdout and "CACHE-OK" in res.stdout
