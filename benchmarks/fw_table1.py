@@ -6,13 +6,16 @@ Our ladder on this host (CPU; TPU kernels in interpret mode are *correctness*
 artifacts, their wall-time is meaningless, so the ladder's jitted rungs are
 the jnp algorithms whose HLO mirrors each rung's data movement):
 
-  cpu_numpy      — fw_numpy, the paper's "CPU implementation" rung
-  naive          — fw_naive (Harish & Narayanan: n full-matrix sweeps)
-  blocked        — fw_blocked (Katz & Kider: 3-phase, s relaxations/element
-                   per round-trip)
-  staged(jit)    — fw_staged with interpret=True *counted separately*; on
-                   CPU this measures the interpreter, not the algorithm —
+  cpu_numpy      — method="numpy", the paper's "CPU implementation" rung
+  naive          — method="naive" (Harish & Narayanan: n full-matrix sweeps)
+  blocked        — method="blocked" (Katz & Kider: 3-phase, s relaxations/
+                   element per round-trip)
+  staged(jit)    — method="staged" with interpret=True *counted separately*;
+                   on CPU this measures the interpreter, not the algorithm —
                    reported for completeness, excluded from speedup claims.
+
+Every rung goes through ``repro.apsp.solve`` (the padding/dispatch the
+callers used to hand-roll lives there now).
 
 Derived column: tasks/sec = n³ / time (the paper's §5 metric).
 """
@@ -21,10 +24,8 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import fw_blocked, fw_naive, fw_numpy, fw_staged
+from repro.apsp import solve
 from repro.core.graph import random_digraph
 
 
@@ -39,25 +40,29 @@ def _time(fn, *args, reps=3, **kw):
     return min(ts)
 
 
+def _rung(method, w, **kw):
+    return solve(w, method=method, validate=False, **kw).dist
+
+
 def run(sizes=(256, 512, 1024), include_cpu=True, include_interpret=False):
     rows = []
     for n in sizes:
         w = random_digraph(n, density=1.0, seed=n)
-        wj = jnp.asarray(w)
         tasks = float(n) ** 3
 
         if include_cpu and n <= 512:
-            t = _time(fw_numpy, w, reps=1)
+            t = _time(_rung, "numpy", w, reps=1)
             rows.append(("fw_table1/cpu_numpy", n, t, tasks / t))
 
-        t = _time(fw_naive, wj)
+        t = _time(_rung, "naive", w)
         rows.append(("fw_table1/naive_harish_narayanan", n, t, tasks / t))
 
-        t = _time(fw_blocked, wj, block_size=min(128, n))
+        t = _time(_rung, "blocked", w, block_size=min(128, n))
         rows.append(("fw_table1/blocked_katz_kider", n, t, tasks / t))
 
         if include_interpret and n <= 256:
-            t = _time(fw_staged, wj, block_size=min(128, n), interpret=True, reps=1)
+            t = _time(_rung, "staged", w, block_size=min(128, n),
+                      interpret=True, reps=1)
             rows.append(("fw_table1/staged_interpret_CORRECTNESS_ONLY", n, t, tasks / t))
     return rows
 

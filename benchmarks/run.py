@@ -1,9 +1,12 @@
 """Benchmark entrypoint: one function per paper table/figure.
 
-Prints ``name,params,us_per_call,derived`` CSV rows.
+Prints ``name,params,us_per_call,derived`` CSV rows and writes the same
+numbers to ``BENCH_fw.json`` (name[params] → us_per_call) so the perf
+trajectory is machine-trackable across PRs.
 
   fw_table1        — the paper's Table 1 implementation ladder
   fw_scaling       — the paper's Figure 7 growth curve (time vs n³ fit)
+  fw_batched       — batched solve() throughput (many small graphs at once)
   dist_fw          — multi-pod distributed FW (subprocess, host devices)
   kernel_sweep     — staged phase-3 kernel parameter sweep (interpret
                      correctness + VMEM-footprint arithmetic; see
@@ -13,6 +16,7 @@ Run: PYTHONPATH=src python -m benchmarks.run [table ...]
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -23,8 +27,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import fw_table1
+from repro.apsp import plan
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO, "BENCH_fw.json")
 
 
 def bench_fw_table1():
@@ -39,13 +45,40 @@ def bench_fw_scaling():
     rows = []
     ns, ts = [], []
     for n in (256, 512, 1024):
-        w = jnp.asarray(fw_table1.random_digraph(n, seed=n))
-        t = fw_table1._time(fw_table1.fw_blocked, w, block_size=min(128, n))
+        w = fw_table1.random_digraph(n, seed=n)
+        t = fw_table1._time(fw_table1._rung, "blocked", w,
+                            block_size=min(128, n))
         ns.append(n)
         ts.append(t)
         rows.append(("fw_scaling/blocked", f"n={n}", t * 1e6, f"{n**3/t/1e9:.2f}Gtasks/s"))
     c = float(np.mean([t / n**3 for n, t in zip(ns, ts)]))
     rows.append(("fw_scaling/implied_constant", "t=c*n^3", c * 1e6, f"c={c:.3e}s"))
+    return rows
+
+
+def bench_fw_batched():
+    """Batched solve() over B small graphs vs B sequential solves.
+
+    The serve-many-small-routing-graphs scenario: one vmap-ed blocked FW
+    amortizes dispatch/padding over the whole batch.
+    """
+    from repro.apsp import solve
+    from repro.core.graph import random_digraph
+
+    rows = []
+    b, n = 16, 100  # non-multiple n (pads to 128): padding handled by solve()
+    wb = np.stack([random_digraph(n, density=0.5, seed=i) for i in range(b)])
+    t_batch = fw_table1._time(
+        lambda: solve(wb, method="blocked", block_size=32, validate=False).dist
+    )
+    t_seq = fw_table1._time(
+        lambda: [solve(wb[i], method="blocked", block_size=32,
+                       validate=False).dist for i in range(b)][-1]
+    )
+    rows.append(("fw_batched/vmap", f"B={b},n={n}", t_batch * 1e6,
+                 f"{b*n**3/t_batch/1e9:.2f}Gtasks/s"))
+    rows.append(("fw_batched/sequential", f"B={b},n={n}", t_seq * 1e6,
+                 f"speedup={t_seq/t_batch:.1f}x"))
     return rows
 
 
@@ -65,9 +98,10 @@ def bench_dist_fw():
         )
         dt = time.perf_counter() - t0
         ok = "OK" if res.returncode == 0 else "FAIL"
-        # SUMMA comm bound: n^2 (1/R + 1/C) words.
-        R, C = ndev // 2, 2
-        comm = n * n * (1 / R + 1 / C) * 4
+        # SUMMA comm bound from the same (R, C) factorization the check
+        # actually runs on (repro.apsp.plan — was hardcoded R=ndev//2, C=2).
+        R, C = plan.mesh_factorization(ndev)
+        comm = plan.summa_comm_bound_bytes(n, R, C)
         rows.append((f"dist_fw/{ok}", f"ndev={ndev},n={n}", dt * 1e6,
                      f"comm={comm/1e6:.2f}MB"))
     return rows
@@ -90,8 +124,7 @@ def bench_kernel_sweep():
         jax.block_until_ready(got)
         dt = time.perf_counter() - t0
         ok = np.allclose(np.asarray(got), want)
-        # fp32 VMEM per grid step: C + 2-stage-buffered A,B slices.
-        vmem = (128 * 128 + 2 * (128 * bk + bk * 128)) * 4
+        vmem = plan.phase3_vmem_bytes(128, 128, bk)
         rows.append((f"kernel_sweep/bk{bk}_{'ok' if ok else 'MISMATCH'}",
                      f"bm=bn=128,bk={bk}", dt * 1e6, f"vmem={vmem/1024:.0f}KB"))
     return rows
@@ -100,6 +133,7 @@ def bench_kernel_sweep():
 TABLES = {
     "fw_table1": bench_fw_table1,
     "fw_scaling": bench_fw_scaling,
+    "fw_batched": bench_fw_batched,
     "dist_fw": bench_dist_fw,
     "kernel_sweep": bench_kernel_sweep,
 }
@@ -107,10 +141,28 @@ TABLES = {
 
 def main() -> None:
     which = sys.argv[1:] or list(TABLES)
+    unknown = [t for t in which if t not in TABLES]
+    if unknown:
+        sys.exit(f"unknown table(s) {unknown}; have {sorted(TABLES)}")
+    record: dict[str, float] = {}
+    if os.path.exists(BENCH_JSON):  # partial runs refresh, not clobber
+        with open(BENCH_JSON) as f:
+            record = json.load(f)
+        # Drop every entry of a table being rerun: row names embed status
+        # (dist_fw/OK vs /FAIL), so merging without this would keep a stale
+        # entry under the opposite status forever.
+        record = {k: v for k, v in record.items()
+                  if k.split("/", 1)[0] not in which}
+    fresh = 0
     print("name,params,us_per_call,derived")
     for t in which:
         for name, params, us, derived in TABLES[t]():
             print(f"{name},{params},{us:.1f},{derived}")
+            record[f"{name}[{params}]"] = round(us, 1)
+            fresh += 1
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+    print(f"# wrote {fresh}/{len(record)} entries to {BENCH_JSON}", file=sys.stderr)
 
 
 if __name__ == "__main__":

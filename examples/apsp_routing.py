@@ -3,15 +3,17 @@
     PYTHONPATH=src python examples/apsp_routing.py
 
 Computes full routing tables (next-hop matrices) for a grid network with a
-failed link, via FW-with-successors, then reports reroute paths.  Also
-demonstrates the OR-AND semiring (transitive closure = reachability).
+failed link via ``repro.apsp.solve(successors=True)`` — the blocked kernel
+path, not the O(n³)-sweep naive loop — and reports reroute paths.  The two
+scenarios (healthy / failed link) run as one *batched* solve.  Also
+demonstrates the OR-AND semiring (transitive closure = reachability)
+through the same front-end, with padding handled internally.
 """
-import jax.numpy as jnp
 import numpy as np
 
+from repro.apsp import solve
 from repro.core.graph import grid_graph
-from repro.core.paths import extract_path, fw_with_successors
-from repro.kernels.ops import transitive_closure
+from repro.core.paths import extract_path
 
 def main():
     side = 6
@@ -23,20 +25,18 @@ def main():
     w_failed[14, 15] = np.inf
     w_failed[15, 14] = np.inf
 
-    for name, mat in (("healthy", w), ("link 14-15 failed", w_failed)):
-        d, succ = fw_with_successors(jnp.asarray(mat))
-        d, succ = np.asarray(d), np.asarray(succ)
+    # One batched solve over both scenarios; next-hops from the blocked path.
+    res = solve(np.stack([w, w_failed]), successors=True, method="blocked")
+    for i, name in enumerate(("healthy", "link 14-15 failed")):
+        d, succ = np.asarray(res.dist[i]), np.asarray(res.succ[i])
         path = extract_path(succ, 12, 17)
         print(f"[{name}] route 12→17: {path} (cost {d[12,17]:.0f})")
 
-    # Reachability via the boolean semiring on the same kernels.
+    # Reachability via the boolean semiring on the same staged kernels;
+    # solve() pads the 36-vertex graph to the tile size internally.
     adj = (np.isfinite(w) & (w > 0)).astype(np.float32)
     np.fill_diagonal(adj, 1.0)
-    # Pad to the 128 tile for the kernel path.
-    padded = np.zeros((128, 128), np.float32)
-    padded[:n, :n] = adj
-    np.fill_diagonal(padded, 1.0)
-    reach = np.asarray(transitive_closure(jnp.asarray(padded)))[:n, :n]
+    reach = np.asarray(solve(adj, method="staged", semiring="or_and").dist)
     print(f"transitive closure: {int(reach.sum())} reachable pairs "
           f"(expected {n*n} on a connected grid)")
 

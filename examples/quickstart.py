@@ -1,37 +1,36 @@
-"""Quickstart: all-pairs shortest paths with the staged blocked FW kernel.
+"""Quickstart: all-pairs shortest paths through the unified solver.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds a random weighted digraph, runs the paper's staged blocked
-Floyd-Warshall (Pallas kernels; interpret mode on CPU, native on TPU),
-verifies against the naive algorithm, and shows the speed ladder.
+Builds a random weighted digraph, solves it with ``repro.apsp.solve`` —
+which picks a method, pads to the tile multiple, validates, and unpads —
+then cross-checks two rungs of the paper's implementation ladder.
 """
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fw_blocked, fw_naive, fw_staged
-from repro.core.graph import pad_to_multiple, random_digraph
+from repro.apsp import solve
+from repro.core.graph import random_digraph
 
 def main():
-    n = 300  # any size — padding handles non-multiples of the tile size
+    n = 300  # any size — solve() pads to the tile multiple internally
     w = random_digraph(n, density=0.25, seed=42)
-    padded, n_orig = pad_to_multiple(w, 128)
-    print(f"graph: {n} vertices, {np.isfinite(w).sum() - n} edges "
-          f"(padded to {padded.shape[0]})")
+    print(f"graph: {n} vertices, {np.isfinite(w).sum() - n} edges")
 
     t0 = time.perf_counter()
-    d_staged = np.asarray(fw_staged(jnp.asarray(padded), block_size=128))[:n, :n]
-    print(f"staged blocked FW (paper): {time.perf_counter()-t0:.2f}s")
+    res = solve(w)  # method="auto": staged on TPU, blocked elsewhere
+    print(f"solve(method={res.method!r}, block_size={res.block_size}, "
+          f"padded {res.n}→{res.padded_n}): {time.perf_counter()-t0:.2f}s")
 
-    d_naive = np.asarray(fw_naive(jnp.asarray(w)))
-    np.testing.assert_allclose(d_staged, d_naive, rtol=1e-5, atol=1e-5)
+    d_naive = np.asarray(solve(w, method="naive").dist)
+    np.testing.assert_allclose(np.asarray(res.dist), d_naive, rtol=1e-5, atol=1e-5)
     print("matches naive FW ✓")
 
-    reachable = np.isfinite(d_staged).mean()
+    d = np.asarray(res.dist)
+    reachable = np.isfinite(d).mean()
     print(f"reachable pairs: {reachable:.1%}; "
-          f"diameter (finite): {d_staged[np.isfinite(d_staged)].max():.2f}")
+          f"diameter (finite): {d[np.isfinite(d)].max():.2f}")
 
 if __name__ == "__main__":
     main()

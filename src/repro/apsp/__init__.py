@@ -1,0 +1,27 @@
+"""repro.apsp — the unified APSP solver front-end.
+
+    from repro.apsp import solve
+    res = solve(w)                       # any n, any method, auto-padded
+    res = solve(w_batch, method="blocked", successors=True)
+
+``solve`` is the one entry point over the paper's implementation ladder
+(numpy / naive / blocked / staged / distributed); ``plan`` holds the shared
+block-size / padding / roofline arithmetic.
+"""
+from repro.apsp import plan
+from repro.apsp.solver import (
+    METHODS,
+    APSPResult,
+    NegativeCycleError,
+    negative_cycle_mask,
+    solve,
+)
+
+__all__ = [
+    "APSPResult",
+    "METHODS",
+    "NegativeCycleError",
+    "negative_cycle_mask",
+    "plan",
+    "solve",
+]

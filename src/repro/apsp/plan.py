@@ -1,0 +1,93 @@
+"""Planning arithmetic for APSP solves — one home for the numbers.
+
+Everything here is host-side integer/float arithmetic shared by the solver
+front-end (``repro.apsp.solve``), the benchmarks, and the launch tooling,
+so block-size selection, padding, mesh factorization, and the roofline
+byte models cannot drift between callers.  The formulas are documented in
+EXPERIMENTS.md (§Roofline, §Perf).
+"""
+from __future__ import annotations
+
+import math
+
+
+def padded_size(n: int, block: int) -> int:
+    """Smallest multiple of ``block`` that is >= n."""
+    return ((n + block - 1) // block) * block
+
+
+def round_count(n: int, block_size: int) -> int:
+    """Pivot rounds of blocked FW at a given tile size (padded n)."""
+    return padded_size(n, block_size) // block_size
+
+
+def auto_block_size(n: int, *, max_block: int = 128) -> int:
+    """Pick a pivot-tile size for an n-vertex graph.
+
+    128 (the paper's sweet spot on our VMEM budget) once n is large enough;
+    below that, the largest power of two <= ~n/4 (floor 16) so padding waste
+    stays bounded (< 33%) while phase 1 still amortizes.
+    """
+    if n >= max_block * 2:
+        return max_block
+    s = 1 << max(4, (max(n, 2) - 1).bit_length() - 2)
+    return min(s, max_block)
+
+
+def mesh_factorization(devices: int, pods: int = 1) -> tuple[int, int]:
+    """(R, C) block-grid factorization for host-device meshes.
+
+    R = product of the row axes (pod × data), C = the model axis.  Single
+    source of truth: ``launch.mesh.make_host_mesh`` builds meshes from it
+    (fw_dist_check runs on those) and benchmarks derive their SUMMA comm
+    bound from it, so the reported comm efficiency always matches the mesh
+    the check actually ran on.
+    """
+    if pods > 1:
+        rows = max(1, devices // pods // 2)
+        return pods * rows, devices // pods // rows
+    rows = max(1, devices // 2)
+    return rows, devices // rows
+
+
+def distributed_multiple(block_size: int, R: int, C: int) -> int:
+    """n must be a multiple of this for ``fw_distributed`` on an R×C grid.
+
+    (build_fw_shard_fn requires n % (R·s) == n % (C·s) == 0.)
+    """
+    return block_size * math.lcm(R, C)
+
+
+def summa_comm_bound_bytes(n: int, R: int, C: int, word: int = 4) -> float:
+    """SUMMA comm lower bound per device: n²(1/R + 1/C) words."""
+    return n * n * (1.0 / R + 1.0 / C) * word
+
+
+def phase3_vmem_bytes(
+    bm: int, bn: int, bk: int, *, word: int = 4, fused: bool = False
+) -> int:
+    """VMEM per phase-3 grid step: resident C + double-buffered A/B slices.
+
+    fused=True adds the C_in accumulator block (the FW relaxation form).
+    See EXPERIMENTS.md §VMEM budget for the derivation.
+    """
+    c_blocks = 2 if fused else 1
+    return (c_blocks * bm * bn + 2 * (bm * bk + bk * bn)) * word
+
+
+def staged_hbm_bytes_per_round(
+    n_r: int, n_c: int, s: int, *, bm: int = 256, bn: int = 256, word: int = 4
+) -> float:
+    """HBM traffic model for one round of the staged backend on one device.
+
+    Per round on an (n_r, n_c) local block: phase 3 reads+writes W once
+    (C tile resident across the k grid) and streams (bm×bk)/(bk×bn) panel
+    slices; phase 2 reads+writes the two panels with the diag broadcast;
+    phase 1 round-trips the diag tile.
+    """
+    return (
+        2 * n_r * n_c                         # C in/out, resident over k
+        + s * n_r * n_c * (1 / bm + 1 / bn)   # streamed panel slices
+        + 4 * s * (n_r + n_c)                 # phase-2 panel r/w
+        + 2 * s * s * 3                       # diag r/w + phase-2 reads
+    ) * word

@@ -59,8 +59,26 @@ def _my_index(axes: Sequence[str] | str) -> jax.Array:
         axes = (axes,)
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        size = (
+            jax.lax.axis_size(a)
+            if hasattr(jax.lax, "axis_size")
+            else jax.lax.psum(1, a)  # older jax: count participants
+        )
+        idx = idx * size + jax.lax.axis_index(a)
     return idx
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (check_vma was check_rep before)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
 
 
 _UNROLL_INNER = False  # counting mode: python-loop the k iterations so
@@ -252,12 +270,11 @@ def build_fw_shard_fn(
 
         return jax.lax.fori_loop(0, num_rounds, body, wl)
 
-    sharded = jax.shard_map(
+    sharded = _shard_map(
         functools.partial(chunk_fn),
         mesh=mesh,
         in_specs=(spec, P(), P()),
         out_specs=spec,
-        check_vma=False,
     )
     in_sharding = NamedSharding(mesh, spec)
     return sharded, in_sharding

@@ -107,14 +107,22 @@ def _phase3_update(
     return jax.lax.fori_loop(0, s, body, w)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "semiring"))
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "semiring", "unroll_rounds")
+)
 def fw_blocked(
-    w: jax.Array, *, block_size: int = 128, semiring: Semiring = MIN_PLUS
+    w: jax.Array,
+    *,
+    block_size: int = 128,
+    semiring: Semiring = MIN_PLUS,
+    unroll_rounds: bool = False,
 ) -> jax.Array:
     """Blocked 3-phase FW (Katz & Kider analogue) in pure jnp.
 
-    n must be a multiple of block_size (use ``graph.pad_to_multiple``).
-    The python round loop unrolls at trace time (n/block_size rounds).
+    n must be a multiple of block_size (``repro.apsp.solve`` pads).
+    The round loop is a fori_loop over a traced pivot offset, so trace size
+    is O(1) in n; ``unroll_rounds=True`` restores the trace-time python loop
+    (bit-identical output, O(n/s) trace — for tests/inspection only).
     """
     n = w.shape[0]
     s = block_size
@@ -122,7 +130,7 @@ def fw_blocked(
         raise ValueError(f"n={n} not a multiple of block_size={s}")
     rounds = n // s
 
-    for b in range(rounds):
+    def round_body(b, w):
         o = b * s
         # Phase 1 — independent diagonal block.
         diag = _diag_update(jax.lax.dynamic_slice(w, (o, o), (s, s)), semiring)
@@ -137,8 +145,13 @@ def fw_blocked(
         # Phase 3 — doubly dependent: whole-matrix ⊕= col_band ⊗ row_band.
         # Relaxing the pivot bands again is a no-op (min is idempotent and
         # they are already closed under k ∈ block), so no masking is needed.
-        w = _phase3_update(w, col_band, row_band, semiring)
-    return w
+        return _phase3_update(w, col_band, row_band, semiring)
+
+    if unroll_rounds:
+        for b in range(rounds):
+            w = round_body(b, w)
+        return w
+    return jax.lax.fori_loop(0, rounds, round_body, w)
 
 
 def check_no_negative_cycles(w: jax.Array) -> jax.Array:

@@ -4,8 +4,23 @@ The paper computes distances only; real deployments (routing tables — one of
 the paper's motivating applications) need next-hops.  We track a successor
 matrix alongside the distance matrix: succ[i,j] = next vertex after i on the
 shortest i→j path.  The FW relaxation updates it wherever the distance
-improves.  This doubles HBM traffic, which is why it is a separate entry
-point rather than a flag on the hot kernel.
+*strictly* improves.
+
+Two implementations:
+
+  * ``fw_with_successors`` — the naive oracle: one relaxation sweep per k
+    (n full-matrix passes, the memory-bound regime).
+  * ``fw_blocked_with_successors`` — the blocked 3-phase algorithm carrying
+    the successor matrix through every phase.  succ[i,j] ← succ[i,k] when
+    pivot k improves (i,j), and k always lives in the pivot block, so the
+    successor operand of each phase is exactly the phase's "A-side" block:
+    the diag succ tile (phases 1/2-row), the panel's own succ columns
+    (phase 2-col), or the succ column band (phase 3).  Same fori-loop round
+    structure as ``fw_blocked`` — O(1) trace size in n.
+
+Successor tracking doubles HBM traffic, which is why it is a separate entry
+point rather than a flag on the hot kernel.  ``repro.apsp.solve(...,
+successors=True)`` routes to the blocked version.
 """
 from __future__ import annotations
 
@@ -16,13 +31,19 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _init_successors(w: jax.Array) -> jax.Array:
+    """succ[i,j] = j where an edge exists, i on the diagonal, else -1."""
+    n = w.shape[0]
+    has_edge = jnp.isfinite(w) & ~jnp.eye(n, dtype=bool)
+    succ = jnp.where(has_edge, jnp.broadcast_to(jnp.arange(n)[None, :], (n, n)), -1)
+    return jnp.where(jnp.eye(n, dtype=bool), jnp.arange(n)[:, None], succ)
+
+
 @jax.jit
 def fw_with_successors(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     """FW returning (dist, succ).  succ[i,j] = -1 where no path exists."""
     n = w.shape[0]
-    has_edge = jnp.isfinite(w) & ~jnp.eye(n, dtype=bool)
-    succ = jnp.where(has_edge, jnp.broadcast_to(jnp.arange(n)[None, :], (n, n)), -1)
-    succ = jnp.where(jnp.eye(n, dtype=bool), jnp.arange(n)[:, None], succ)
+    succ = _init_successors(w)
 
     def body(k, carry):
         w, succ = carry
@@ -33,6 +54,93 @@ def fw_with_successors(w: jax.Array) -> tuple[jax.Array, jax.Array]:
         return w, succ
 
     return jax.lax.fori_loop(0, n, body, (w, succ))
+
+
+def _relax_with_succ(k, w, succ, a, a_succ, b):
+    """(w, succ) ⊕= step k: cand = a[:,k] + b[k,:]; succ ← a_succ[:,k]."""
+    cand = a[:, k, None] + b[k, None, :]
+    better = cand < w
+    return jnp.where(better, cand, w), jnp.where(better, a_succ[:, k, None], succ)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def fw_blocked_with_successors(
+    w: jax.Array, *, block_size: int = 128
+) -> tuple[jax.Array, jax.Array]:
+    """Blocked 3-phase FW carrying a successor matrix (min-plus only).
+
+    n must be a multiple of block_size (``repro.apsp.solve`` pads).  Updates
+    use strict improvement (<), matching ``fw_with_successors``; on graphs
+    without ties the two produce identical successor matrices.
+    """
+    n = w.shape[0]
+    s = block_size
+    if n % s:
+        raise ValueError(f"n={n} not a multiple of block_size={s}")
+    succ = _init_successors(w)
+
+    def round_body(b, carry):
+        w, succ = carry
+        o = b * s
+
+        # Phase 1 — diagonal tile; i, j, k all in the pivot block.
+        diag = jax.lax.dynamic_slice(w, (o, o), (s, s))
+        dsucc = jax.lax.dynamic_slice(succ, (o, o), (s, s))
+
+        def p1(k, c):
+            t, ts = c
+            t, ts = _relax_with_succ(k, t, ts, t, ts, t)
+            return t, ts
+
+        diag, dsucc = jax.lax.fori_loop(0, s, p1, (diag, dsucc))
+        w = jax.lax.dynamic_update_slice(w, diag, (o, o))
+        succ = jax.lax.dynamic_update_slice(succ, dsucc, (o, o))
+
+        # Phase 2 — row band (s, n): rows i live in the pivot block, so
+        # succ[i,k] is the closed diag succ tile.  Row k of the band feeds
+        # later iterations → k sequential.
+        rband = jax.lax.dynamic_slice(w, (o, 0), (s, n))
+        rsucc = jax.lax.dynamic_slice(succ, (o, 0), (s, n))
+
+        def p2r(k, c):
+            p, ps = c
+            p, ps = _relax_with_succ(k, p, ps, diag, dsucc, p)
+            return p, ps
+
+        rband, rsucc = jax.lax.fori_loop(0, s, p2r, (rband, rsucc))
+        rband = jax.lax.dynamic_update_slice(rband, diag, (0, o))
+        rsucc = jax.lax.dynamic_update_slice(rsucc, dsucc, (0, o))
+
+        # Phase 2 — column band (n, s): columns k live in the pivot block,
+        # so succ[i,k] is the band's own (evolving) succ column k.
+        cband = jax.lax.dynamic_slice(w, (0, o), (n, s))
+        csucc = jax.lax.dynamic_slice(succ, (0, o), (n, s))
+
+        def p2c(k, c):
+            p, ps = c
+            p, ps = _relax_with_succ(k, p, ps, p, ps, diag)
+            return p, ps
+
+        cband, csucc = jax.lax.fori_loop(0, s, p2c, (cband, csucc))
+        cband = jax.lax.dynamic_update_slice(cband, diag, (o, 0))
+        csucc = jax.lax.dynamic_update_slice(csucc, dsucc, (o, 0))
+
+        w = jax.lax.dynamic_update_slice(w, rband, (o, 0))
+        succ = jax.lax.dynamic_update_slice(succ, rsucc, (o, 0))
+        w = jax.lax.dynamic_update_slice(w, cband, (0, o))
+        succ = jax.lax.dynamic_update_slice(succ, csucc, (0, o))
+
+        # Phase 3 — whole matrix vs the closed bands; succ[i,k] is the succ
+        # column band.  Re-relaxing the pivot bands is a no-op under strict
+        # improvement (they are already closed under k ∈ block).
+        def p3(k, c):
+            wm, sm = c
+            return _relax_with_succ(k, wm, sm, cband, csucc, rband)
+
+        w, succ = jax.lax.fori_loop(0, s, p3, (w, succ))
+        return w, succ
+
+    return jax.lax.fori_loop(0, n // s, round_body, (w, succ))
 
 
 def extract_path(succ: np.ndarray, src: int, dst: int, max_len: int | None = None) -> list[int]:
@@ -49,3 +157,11 @@ def extract_path(succ: np.ndarray, src: int, dst: int, max_len: int | None = Non
             return []
         path.append(cur)
     return path
+
+
+def path_cost(w: np.ndarray, path: list[int]) -> float:
+    """Sum of edge weights along ``path`` in the original adjacency matrix."""
+    w = np.asarray(w)
+    if not path:
+        return float("inf")
+    return float(sum(w[a, b] for a, b in zip(path, path[1:])))

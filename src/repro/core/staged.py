@@ -13,7 +13,12 @@ deliberate no-op (they are already closed under k ∈ block and ⊕ is
 idempotent) which keeps the grid uniform — the TPU analogue of the paper
 keeping all thread blocks identical.
 
-The round loop is a python loop → unrolled at trace time (n/s rounds).
+The round loop is a ``jax.lax.fori_loop`` over rounds: the body is traced
+once with a traced block offset (``dynamic_slice`` keeps every shape
+static), so the jaxpr holds a *constant* number of pallas_calls regardless
+of n — compile time is O(1) in the round count.  ``unroll_rounds=True``
+restores the original trace-time python loop (O(n/s) pallas_calls); the two
+lowerings are bit-identical (tests/test_apsp_solve.py).
 """
 from __future__ import annotations
 
@@ -25,12 +30,15 @@ import jax.numpy as jnp
 from repro.core.semiring import MIN_PLUS, Semiring
 from repro.kernels.fw_phase1 import fw_phase1
 from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
-from repro.kernels.minplus_matmul import semiring_matmul
+from repro.kernels.minplus_matmul import _fit_block, semiring_matmul
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_size", "bm", "bn", "bk", "variant", "semiring", "interpret"),
+    static_argnames=(
+        "block_size", "bm", "bn", "bk", "variant", "semiring", "interpret",
+        "unroll_rounds",
+    ),
 )
 def fw_staged(
     w: jax.Array,
@@ -42,11 +50,14 @@ def fw_staged(
     variant: str = "fori",
     semiring: Semiring = MIN_PLUS,
     interpret: bool | None = None,
+    unroll_rounds: bool = False,
 ) -> jax.Array:
     """Staged blocked FW (the paper's 'Staged Load' implementation).
 
-    w: (n,n), n % block_size == 0 (see ``graph.pad_to_multiple``).
+    w: (n,n), n % block_size == 0 (``repro.apsp.solve`` pads arbitrary n).
     bm/bn/bk: phase-3 output-tile and staging-depth parameters.
+    unroll_rounds: trace-time python round loop instead of fori_loop
+      (O(n/s) trace size; only useful for trace inspection and tests).
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
@@ -59,30 +70,37 @@ def fw_staged(
     # Phase-3 staging depth cannot exceed the pivot width.
     bk_eff = min(bk, s)
     bm_eff, bn_eff = min(bm, n), min(bn, n)
+    # Phase-2 band tile must divide the band length (e.g. n=640 → bt=320).
+    bt_eff = _fit_block(n, 512)
 
-    for b in range(n // s):
+    def round_body(b, w):
         o = b * s
         diag = fw_phase1(
             jax.lax.dynamic_slice(w, (o, o), (s, s)), semiring=semiring,
             interpret=interpret,
         )
         row_band = fw_phase2_row(
-            diag, jax.lax.dynamic_slice(w, (o, 0), (s, n)), semiring=semiring,
-            interpret=interpret,
+            diag, jax.lax.dynamic_slice(w, (o, 0), (s, n)), bt=bt_eff,
+            semiring=semiring, interpret=interpret,
         )
         # The diagonal tile inside the row band must be the closed one; the
         # row kernel recomputed that slice against itself which is a no-op
         # for idempotent ⊕, but we overwrite for exactness under any ⊕.
         row_band = jax.lax.dynamic_update_slice(row_band, diag, (0, o))
         col_band = fw_phase2_col(
-            diag, jax.lax.dynamic_slice(w, (0, o), (n, s)), semiring=semiring,
-            interpret=interpret,
+            diag, jax.lax.dynamic_slice(w, (0, o), (n, s)), bt=bt_eff,
+            semiring=semiring, interpret=interpret,
         )
         col_band = jax.lax.dynamic_update_slice(col_band, diag, (o, 0))
         w = jax.lax.dynamic_update_slice(w, row_band, (o, 0))
         w = jax.lax.dynamic_update_slice(w, col_band, (0, o))
-        w = semiring_matmul(
+        return semiring_matmul(
             col_band, row_band, w, semiring=semiring, bm=bm_eff, bn=bn_eff,
             bk=bk_eff, variant=variant, interpret=interpret,
         )
-    return w
+
+    if unroll_rounds:
+        for b in range(n // s):
+            w = round_body(b, w)
+        return w
+    return jax.lax.fori_loop(0, n // s, round_body, w)

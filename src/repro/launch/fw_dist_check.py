@@ -27,29 +27,18 @@ def main() -> int:
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import AxisType
 
     from repro.core import fw_naive
     from repro.core.distributed import fw_distributed
     from repro.core.graph import random_digraph
+    from repro.launch.mesh import make_host_mesh
 
     ndev = len(jax.devices())
     assert ndev == args.devices, (ndev, args.devices)
-    if args.pods > 1:
-        rows = args.devices // args.pods // 2
-        mesh = jax.make_mesh(
-            (args.pods, rows, args.devices // args.pods // rows),
-            ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
-        )
-        row_axes = ("pod", "data")
-    else:
-        rows = max(1, args.devices // 2)
-        mesh = jax.make_mesh(
-            (rows, args.devices // rows), ("data", "model"),
-            axis_types=(AxisType.Auto,) * 2,
-        )
-        row_axes = "data"
+    # make_host_mesh builds from apsp.plan.mesh_factorization — the same
+    # (R, C) grid benchmarks use to derive the SUMMA comm bound.
+    mesh = make_host_mesh(args.devices, pods=args.pods)
+    row_axes = ("pod", "data") if args.pods > 1 else "data"
 
     w = random_digraph(args.n, density=0.3, seed=0)
     want = np.asarray(fw_naive(jnp.asarray(w)))

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.apsp import plan
 from repro.core.distributed import build_fw_shard_fn
 from repro.launch import roofline as rl
 from repro.launch.mesh import make_production_mesh
@@ -54,7 +55,7 @@ def run(n: int, block_size: int, multi_pod: bool, backend: str,
         backend="jnp", interpret=True, lookahead=lookahead,
         phase2_shard=phase2_shard,
     )
-    rounds = n // block_size
+    rounds = plan.round_count(n, block_size)
     fn = jax.jit(sharded, donate_argnums=(0,))
     w_s = jax.ShapeDtypeStruct((n, n), jnp.float32)
 
@@ -81,27 +82,13 @@ def run(n: int, block_size: int, multi_pod: bool, backend: str,
 
     if backend == "pallas":
         # Mosaic cannot compile on CPU, so the Pallas phase-3 memory term is
-        # derived from BlockSpec arithmetic (the VMEM contract is explicit):
-        # per round per device —
-        #   phase 3: C tile resident across the k grid → W read+written ONCE
-        #            (2·n_r·n_c); panel slices streamed (bm×bk)+(bk×bn) per
-        #            grid step → s·n_r·n_c·(1/bm + 1/bn) words;
-        #   phase 2: panels r/w + diag broadcast reads;
-        #   phase 1: diag r/w.
+        # derived from BlockSpec arithmetic (the VMEM contract is explicit;
+        # model and derivation live in repro.apsp.plan / EXPERIMENTS.md).
         # The compute term is the same op count as the jnp backend (kept
         # from the measured lowering); collectives identical (same pmins).
         n_r = n // (chips // mesh.shape["model"])
         n_c = n // mesh.shape["model"]
-        s = block_size
-        bm = bn = 256.0
-        word = 4
-        per_round = (
-            2 * n_r * n_c                      # C in/out, resident over k
-            + s * n_r * n_c * (1 / bm + 1 / bn)  # streamed panel slices
-            + 4 * s * (n_r + n_c)              # phase-2 panel r/w
-            + 2 * s * s * 3                    # diag r/w + phase-2 reads
-        ) * word
-        byts = per_round * rounds
+        byts = plan.staged_hbm_bytes_per_round(n_r, n_c, block_size) * rounds
 
     useful_ops = 2.0 * n ** 3
     t_compute = flops / VPU_OPS  # FW is a VPU workload
@@ -112,7 +99,7 @@ def run(n: int, block_size: int, multi_pod: bool, backend: str,
     # SUMMA comm lower bound per chip (f32 words).
     R = chips // mesh.shape["model"]
     C = mesh.shape["model"]
-    comm_bound = n * n * (1 / R + 1 / C) * 4
+    comm_bound = plan.summa_comm_bound_bytes(n, R, C)
 
     rec = {
         "workload": "distributed_fw",

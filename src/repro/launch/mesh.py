@@ -7,27 +7,34 @@ jax initialization.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.apsp.plan import mesh_factorization
+
+
+def _make_mesh(shape, axes):
+    try:  # axis_types only exists on newer jax
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices: int | None = None, *, pods: int = 1):
-    """Small CPU-device mesh for tests/examples (devices already forced)."""
+    """Small CPU-device mesh for tests/examples (devices already forced).
+
+    Uses the same (R, C) factorization as launch.fw_dist_check
+    (repro.apsp.plan.mesh_factorization).
+    """
     n = n_devices or len(jax.devices())
+    R, C = mesh_factorization(n, pods)
     if pods > 1:
-        rows = max(1, n // pods // 2)
-        cols = n // pods // rows
-        return jax.make_mesh(
-            (pods, rows, cols), ("pod", "data", "model"),
-            axis_types=(AxisType.Auto,) * 3,
-        )
-    rows = max(1, n // 2)
-    return jax.make_mesh(
-        (rows, n // rows), ("data", "model"), axis_types=(AxisType.Auto,) * 2
-    )
+        return _make_mesh((pods, R // pods, C), ("pod", "data", "model"))
+    return _make_mesh((R, C), ("data", "model"))

@@ -1,0 +1,45 @@
+"""Import hypothesis if available; otherwise a skip-only stand-in.
+
+The property-based tests are optional (hypothesis is an optional test
+dependency — see requirements.txt), but the modules that contain them also
+hold plain pytest cases which must collect and run everywhere.  Importing
+``given/settings/st`` from here keeps those modules import-safe: without
+hypothesis, ``@given``-decorated tests collect as skips and everything else
+runs normally.
+
+Leading underscore → pytest does not collect this module itself.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _Strategies:
+        """Stub: strategy objects are only inspected by @given, never here."""
+
+        def _stub(self, *_args, **_kwargs):
+            return None
+
+        floats = integers = sampled_from = lists = booleans = _stub
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import fw_blocked, fw_naive, fw_numpy, fw_staged
 from repro.core.graph import grid_graph, pad_to_multiple, random_digraph, ring_graph

@@ -5,7 +5,7 @@ failed for a semiring, blocked/staged FW would not equal naive FW."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.semiring import MAX_MIN, MAX_PLUS, MIN_PLUS, OR_AND, SEMIRINGS
 
