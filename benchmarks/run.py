@@ -11,8 +11,15 @@ trajectory is machine-trackable across PRs.
   kernel_sweep     — staged phase-3 kernel parameter sweep (interpret
                      correctness + VMEM-footprint arithmetic; see
                      EXPERIMENTS.md §Perf for the roofline-side analysis)
+  fw_fused         — the fused one-dispatch-per-round kernel at the Table-1
+                     sizes, plus the plan.autotune_fw measured sweep over
+                     (block_size, bm, bn, bk) round configs
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...]
+     PYTHONPATH=src python -m benchmarks.run --smoke
+       (CI guard: tiny interpret-mode correctness smoke + BENCH_fw.json
+        key diff against the expected-key manifest, so a missing or
+        renamed benchmark entry fails fast instead of rotting silently)
 """
 from __future__ import annotations
 
@@ -130,16 +137,141 @@ def bench_kernel_sweep():
     return rows
 
 
+FUSED_SIZES = (256, 512, 1024)
+SWEEP_N = 256
+
+
+def _sweep_cfgs():
+    """Deterministic autotune-sweep configs (the key manifest derives from
+    this, so a changed sweep shows up as a key diff, not silent drift)."""
+    cands = plan.fw_candidates(SWEEP_N, block_sizes=(64, 128), bks=(16, 32))
+    return [c for c in cands
+            if c["impl"] == "fused" or c["bm"] == c["block_size"]]
+
+
+def _cfg_key(c) -> str:
+    return (f"fw_fused/sweep_{c['impl']}_s{c['block_size']}"
+            f"_bm{c['bm']}_bk{c['bk']}[n={SWEEP_N}]")
+
+
+def bench_fw_fused():
+    """Fused round kernel: Table-1 sizes + the autotune sweep.
+
+    Wall-times are interpret-mode on CPU (XLA-compiled trace of the kernel,
+    not Mosaic) — comparable across rungs here, but the TPU numbers are the
+    ones the paper's 5× claim lives on.  Derived column: dispatches/round.
+    """
+    from repro.core.graph import random_digraph
+    from repro.core.staged import fw_staged
+
+    rows = []
+    for n in FUSED_SIZES:
+        w = random_digraph(n, density=1.0, seed=n)
+        # min over 2 reps at n=1024: the first warm interpret-mode call pays
+        # one-off XLA CPU autotuning/paging (~2× the steady state).
+        t = fw_table1._time(fw_table1._rung, "fused", w,
+                            block_size=min(128, n), reps=2 if n >= 1024 else 3)
+        rows.append(("fw_fused/solve", f"n={n}", t * 1e6,
+                     f"{n**3/t/1e9:.2f}Gtasks/s,1disp/round"))
+
+    # plan.autotune_fw measured sweep: both round lowerings, ranked.
+    w = jnp.asarray(random_digraph(SWEEP_N, density=1.0, seed=SWEEP_N))
+
+    def _measure(c):
+        return fw_table1._time(
+            lambda: fw_staged(
+                w, block_size=c["block_size"], bm=c["bm"], bn=c["bn"],
+                bk=c["bk"], fused=c["impl"] == "fused",
+                interpret=True,
+            ),
+        )
+
+    cfgs = _sweep_cfgs()
+    for c in cfgs:
+        c["us"] = _measure(c) * 1e6
+    best = min(cfgs, key=lambda c: c["us"])
+    for c in cfgs:
+        flag = "best," if c is best else ""
+        rows.append((_cfg_key(c).split("[")[0], f"n={SWEEP_N}", c["us"],
+                     f"{flag}{c['dispatches_per_round']}disp,"
+                     f"vmem={c['vmem_bytes']/1024:.0f}KB"))
+    return rows
+
+
 TABLES = {
     "fw_table1": bench_fw_table1,
     "fw_scaling": bench_fw_scaling,
     "fw_batched": bench_fw_batched,
     "dist_fw": bench_dist_fw,
     "kernel_sweep": bench_kernel_sweep,
+    "fw_fused": bench_fw_fused,
 }
 
 
+def expected_keys() -> dict[str, list[str]]:
+    """The key manifest: every BENCH_fw.json entry each table must produce.
+
+    ``--smoke`` diffs this against the committed file; a benchmark that is
+    renamed, dropped, or silently stops emitting a size fails CI instead of
+    leaving a stale number behind.
+    """
+    return {
+        "fw_table1": (
+            [f"fw_table1/cpu_numpy[n={n}]" for n in (256, 512)]
+            + [f"fw_table1/naive_harish_narayanan[n={n}]" for n in (256, 512, 1024)]
+            + [f"fw_table1/blocked_katz_kider[n={n}]" for n in (256, 512, 1024)]
+        ),
+        "fw_scaling": (
+            [f"fw_scaling/blocked[n={n}]" for n in (256, 512, 1024)]
+            + ["fw_scaling/implied_constant[t=c*n^3]"]
+        ),
+        "fw_batched": ["fw_batched/vmap[B=16,n=100]",
+                       "fw_batched/sequential[B=16,n=100]"],
+        "dist_fw": ["dist_fw/OK[ndev=8,n=512]"],
+        "kernel_sweep": [f"kernel_sweep/bk{bk}_ok[bm=bn=128,bk={bk}]"
+                         for bk in (8, 16, 32, 64, 128)],
+        "fw_fused": (
+            [f"fw_fused/solve[n={n}]" for n in FUSED_SIZES]
+            + [_cfg_key(c) for c in _sweep_cfgs()]
+        ),
+    }
+
+
+def smoke() -> None:
+    """CI guard: interpret-mode correctness smoke + BENCH key diff."""
+    from repro.apsp import solve
+    from repro.core.floyd_warshall import fw_naive
+    from repro.core.graph import random_digraph
+
+    w = random_digraph(48, density=0.4, seed=3)  # pads 48 → 64 at s=32
+    res = solve(w, method="fused", block_size=32, validate=False)
+    want = np.asarray(fw_naive(jnp.asarray(w)))
+    np.testing.assert_allclose(np.asarray(res.dist), want, rtol=1e-5, atol=1e-5)
+    print("smoke: fused solve matches naive oracle (n=48, padded)")
+
+    if not os.path.exists(BENCH_JSON):
+        sys.exit(f"smoke: {BENCH_JSON} missing — run the benchmarks first")
+    with open(BENCH_JSON) as f:
+        have = set(json.load(f))
+    want_keys = {k for keys in expected_keys().values() for k in keys}
+    missing = sorted(want_keys - have)
+    # Every key in the file is table-produced, so anything outside the
+    # manifest is stale — including leftovers of a dropped/renamed table.
+    stale = sorted(have - want_keys)
+    for k in missing:
+        print(f"smoke: MISSING benchmark entry {k!r}", file=sys.stderr)
+    for k in stale:
+        print(f"smoke: STALE benchmark entry {k!r} (renamed/dropped?)",
+              file=sys.stderr)
+    if missing or stale:
+        sys.exit(1)
+    print(f"smoke: BENCH_fw.json keys match the manifest ({len(have)} entries)")
+
+
 def main() -> None:
+    if "--smoke" in sys.argv[1:]:
+        smoke()
+        return
     which = sys.argv[1:] or list(TABLES)
     unknown = [t for t in which if t not in TABLES]
     if unknown:

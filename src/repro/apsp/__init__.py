@@ -5,8 +5,8 @@
     res = solve(w_batch, method="blocked", successors=True)
 
 ``solve`` is the one entry point over the paper's implementation ladder
-(numpy / naive / blocked / staged / distributed); ``plan`` holds the shared
-block-size / padding / roofline arithmetic.
+(numpy / naive / blocked / staged / fused / distributed); ``plan`` holds the
+shared block-size / padding / roofline / autotune arithmetic.
 """
 from repro.apsp import plan
 from repro.apsp.solver import (

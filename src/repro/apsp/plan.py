@@ -75,6 +75,133 @@ def phase3_vmem_bytes(
     return (c_blocks * bm * bn + 2 * (bm * bk + bk * bn)) * word
 
 
+def fused_round_vmem_bytes(
+    n: int, s: int, bk: int, *, word: int = 4, variant: str = "fori"
+) -> int:
+    """VMEM per fused-round grid step (``kernels.fw_round``).
+
+    Persistent scratch holds both closed pivot bands (2·s·n words); the
+    (s,s) input and output tiles are each double-buffered by the Pallas
+    pipeline.  The "broadcast" phase-3 variant additionally materializes an
+    (s, bk, s) product transient.  See EXPERIMENTS.md §Fused round.
+    """
+    bands = 2 * s * n
+    tiles = 2 * 2 * s * s
+    transient = s * bk * s if variant == "broadcast" else 0
+    return (bands + tiles + transient) * word
+
+
+def fused_round_hbm_bytes(n: int, s: int, *, word: int = 4) -> float:
+    """HBM traffic for ONE fused round: every tile read+written exactly once
+    at its grid step — T² + 2T - 1 steps of an (s,s) block each.
+
+    Compare ``staged_hbm_bytes_per_round``: the multi-kernel round re-reads
+    the pivot bands for phase 3 and round-trips the phase-2 splices through
+    HBM; the fused round keeps all of that in scratch.
+    """
+    T = padded_size(n, s) // s
+    return 2.0 * (T * T + 2 * T - 1) * s * s * word
+
+
+def fused_round_steps(n: int, s: int) -> int:
+    """Grid steps of one fused round: T² phase-3 + 2(T-1) bands + 1 pivot."""
+    T = padded_size(n, s) // s
+    return T * T + 2 * T - 1
+
+
+def fw_candidates(
+    n: int,
+    *,
+    vmem_budget: int = 128 << 20,
+    word: int = 4,
+    variant: str = "fori",
+    block_sizes: tuple[int, ...] = (32, 64, 128, 256),
+    bks: tuple[int, ...] = (8, 16, 32, 64, 128),
+) -> list[dict]:
+    """Model-filtered (block_size, bm, bn, bk) autotune candidates.
+
+    Covers both round lowerings: ``impl="fused"`` (one dispatch/round; bm =
+    bn = block_size by construction) and ``impl="staged"`` (4 dispatches;
+    bm/bn from the phase-3 tile grid).  A candidate survives iff its
+    per-step VMEM footprint fits ``vmem_budget`` (default: a 128 MB v5e
+    core).  Deterministic — the benchmark key manifest is derived from it.
+    """
+    out = []
+    for s in block_sizes:
+        if s > max(n, 16):
+            continue
+        # Clamp serves caller-supplied block_sizes smaller than the default
+        # grid (e.g. s=16 at n=8); with the defaults any admitted s <= n.
+        sp = min(s, n)
+        m = padded_size(n, sp)
+        for bk in bks:
+            if bk > sp:
+                continue
+            rounds = m // sp
+            v = fused_round_vmem_bytes(m, sp, bk, word=word, variant=variant)
+            if v <= vmem_budget:
+                per_round = fused_round_hbm_bytes(m, sp, word=word)
+                out.append(dict(
+                    impl="fused", block_size=sp, bm=sp, bn=sp, bk=bk,
+                    vmem_bytes=v,
+                    hbm_bytes_per_round=per_round,
+                    hbm_bytes_total=rounds * per_round,
+                    steps_per_round=fused_round_steps(m, sp),
+                    dispatches_per_round=1,
+                ))
+            for bm in (sp, 2 * sp):
+                if bm > m:
+                    continue
+                v3 = phase3_vmem_bytes(bm, bm, bk, word=word, fused=True)
+                if v3 <= vmem_budget:
+                    per_round = staged_hbm_bytes_per_round(
+                        m, m, sp, bm=bm, bn=bm, word=word
+                    )
+                    out.append(dict(
+                        impl="staged", block_size=sp, bm=bm, bn=bm, bk=bk,
+                        vmem_bytes=v3,
+                        hbm_bytes_per_round=per_round,
+                        hbm_bytes_total=rounds * per_round,
+                        steps_per_round=(m // bm) ** 2 * (sp // bk),
+                        dispatches_per_round=4,
+                    ))
+    return out
+
+
+def autotune_fw(
+    n: int,
+    measure=None,
+    *,
+    vmem_budget: int = 128 << 20,
+    variant: str = "fori",
+    top: int | None = None,
+) -> list[dict]:
+    """Rank fused/staged round configs for an n-vertex solve.
+
+    measure: optional callback ``cfg_dict -> seconds`` (e.g. a timed
+    ``fw_staged`` call); when given, candidates are ranked by measured time
+    and each dict gains ``"us"``.  Without it, ranking falls back to the
+    model: total HBM bytes over all n/s rounds — per-round bytes alone
+    would favor tiny pivots that pay for themselves in round count (the
+    kernels are bandwidth-bound on the VPU roofline — EXPERIMENTS.md
+    §Roofline) — with fused-before-staged dispatch count as tiebreak.
+    """
+    cands = fw_candidates(n, vmem_budget=vmem_budget, variant=variant)
+    if not cands:
+        raise ValueError(
+            f"no viable round config for n={n} within vmem_budget="
+            f"{vmem_budget}; pass smaller block_sizes via fw_candidates"
+        )
+    if measure is not None:
+        for c in cands:
+            c["us"] = measure(c) * 1e6
+        cands.sort(key=lambda c: c["us"])
+    else:
+        cands.sort(key=lambda c: (c["hbm_bytes_total"],
+                                  c["dispatches_per_round"]))
+    return cands[:top] if top else cands
+
+
 def staged_hbm_bytes_per_round(
     n_r: int, n_c: int, s: int, *, bm: int = 256, bn: int = 256, word: int = 4
 ) -> float:

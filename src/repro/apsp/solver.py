@@ -8,7 +8,8 @@ pick a method and block size, run, unpad, verify.  ``solve`` owns all of it:
     the top-left n×n of the padded closure equals the closure of the input.
   * **dispatch** — ``method="auto"`` picks a sensible rung of the paper's
     implementation ladder for the input size and backend; explicit names
-    ("numpy" | "naive" | "blocked" | "staged" | "distributed") pin one.
+    ("numpy" | "naive" | "blocked" | "staged" | "fused" | "distributed")
+    pin one ("fused" = staged with the single-dispatch fused round kernel).
   * **batching** — a (B, n, n) input runs all B graphs in one ``vmap``-ed
     computation (the serve-many-small-routing-graphs scenario); results
     match per-graph solves bit-for-bit.
@@ -32,7 +33,7 @@ from repro.core.paths import fw_blocked_with_successors, fw_with_successors
 from repro.core.semiring import MIN_PLUS, SEMIRINGS, Semiring
 from repro.core.staged import fw_staged
 
-METHODS = ("auto", "numpy", "naive", "blocked", "staged", "distributed")
+METHODS = ("auto", "numpy", "naive", "blocked", "staged", "fused", "distributed")
 
 # Below this size a padded tile pass does more work than the n sweeps of the
 # naive kernel; "auto" stays on the naive rung.
@@ -128,7 +129,9 @@ def solve(
        solver pads to the tile multiple and unpads the result.  Integer
        matrices are promoted to float32 when the semiring identities are
        non-finite (min-plus & friends) — ints cannot encode +inf.
-    method: "auto" | "numpy" | "naive" | "blocked" | "staged" | "distributed".
+    method: "auto" | "numpy" | "naive" | "blocked" | "staged" | "fused" |
+       "distributed" ("fused" pins the one-pallas_call-per-round kernel;
+       "staged" defaults to it too and falls back per fw_staged).
     successors: also return next-hop matrices (min-plus only; blocked or
        naive methods).
     block_size: pivot-tile size for blocked/staged/distributed (None = auto).
@@ -170,7 +173,7 @@ def solve(
     # --- resolve padding ------------------------------------------------
     s: int | None = None
     m = n
-    if meth in ("blocked", "staged"):
+    if meth in ("blocked", "staged", "fused"):
         s = block_size or plan.auto_block_size(n)
         m = plan.padded_size(n, s)
     elif meth == "distributed":
@@ -207,9 +210,12 @@ def solve(
             else:
                 run = lambda x: fw_blocked(x, block_size=s, semiring=sr)
                 dist = jax.vmap(run)(wp) if batched else run(wp)
-        elif meth == "staged":
+        elif meth in ("staged", "fused"):
+            # "staged" leaves the round lowering to fw_staged (fused by
+            # default); "fused" pins the single-dispatch round kernel.
             run = lambda x: fw_staged(
-                x, block_size=s, semiring=sr, variant=variant, interpret=interpret
+                x, block_size=s, semiring=sr, variant=variant,
+                interpret=interpret, fused=True if meth == "fused" else None,
             )
             dist = jax.vmap(run)(wp) if batched else run(wp)
         else:  # distributed

@@ -68,17 +68,9 @@ def _my_index(axes: Sequence[str] | str) -> jax.Array:
     return idx
 
 
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """jax.shard_map across jax versions (check_vma was check_rep before)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(
-            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
-        )
-    from jax.experimental.shard_map import shard_map
-
-    return shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
-    )
+# The version shim lives in utils.compat now (the MoE a2a layer shares it);
+# the old private name stays importable for existing callers.
+from repro.utils.compat import shard_map as _shard_map  # noqa: E402
 
 
 _UNROLL_INNER = False  # counting mode: python-loop the k iterations so

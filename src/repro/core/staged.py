@@ -13,12 +13,22 @@ deliberate no-op (they are already closed under k ∈ block and ⊕ is
 idempotent) which keeps the grid uniform — the TPU analogue of the paper
 keeping all thread blocks identical.
 
+The round itself has two lowerings:
+
+  * ``fused=True`` (the default) — the whole round is ONE ``pallas_call``
+    (``kernels.fw_round``): every program classifies its tile from
+    ``program_id`` vs. the pivot index and runs the matching stage, with the
+    closed pivot bands staged through VMEM scratch instead of HBM
+    round-trips.  1 dispatch/round, no ``dynamic_slice`` band copies.
+  * ``fused=False`` — the original 4-dispatch sequence (phase 1, 2×phase 2,
+    phase 3) with the bands spliced via ``dynamic_update_slice``.
+
 The round loop is a ``jax.lax.fori_loop`` over rounds: the body is traced
-once with a traced block offset (``dynamic_slice`` keeps every shape
-static), so the jaxpr holds a *constant* number of pallas_calls regardless
-of n — compile time is O(1) in the round count.  ``unroll_rounds=True``
-restores the original trace-time python loop (O(n/s) pallas_calls); the two
-lowerings are bit-identical (tests/test_apsp_solve.py).
+once with a traced block offset, so the jaxpr holds a *constant* number of
+pallas_calls regardless of n — compile time is O(1) in the round count.
+``unroll_rounds=True`` restores the seed's trace-time python loop (and, by
+default, the seed's 4-kernel round).  All four lowerings are bit-identical
+(tests/test_apsp_solve.py, tests/test_fw_round.py).
 """
 from __future__ import annotations
 
@@ -30,6 +40,7 @@ import jax.numpy as jnp
 from repro.core.semiring import MIN_PLUS, Semiring
 from repro.kernels.fw_phase1 import fw_phase1
 from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
+from repro.kernels.fw_round import fw_round
 from repro.kernels.minplus_matmul import _fit_block, semiring_matmul
 
 
@@ -37,7 +48,7 @@ from repro.kernels.minplus_matmul import _fit_block, semiring_matmul
     jax.jit,
     static_argnames=(
         "block_size", "bm", "bn", "bk", "variant", "semiring", "interpret",
-        "unroll_rounds",
+        "unroll_rounds", "fused",
     ),
 )
 def fw_staged(
@@ -51,18 +62,26 @@ def fw_staged(
     semiring: Semiring = MIN_PLUS,
     interpret: bool | None = None,
     unroll_rounds: bool = False,
+    fused: bool | None = None,
 ) -> jax.Array:
     """Staged blocked FW (the paper's 'Staged Load' implementation).
 
     w: (n,n), n % block_size == 0 (``repro.apsp.solve`` pads arbitrary n).
-    bm/bn/bk: phase-3 output-tile and staging-depth parameters.
+    bm/bn/bk: phase-3 output-tile and staging-depth parameters (the fused
+      round works on (s,s) tiles, so bm/bn only affect ``fused=False``).
     unroll_rounds: trace-time python round loop instead of fori_loop
       (O(n/s) trace size; only useful for trace inspection and tests).
+    fused: one pallas_call per round (kernels.fw_round) vs the 4-dispatch
+      multi-kernel round.  None → fused, except under ``unroll_rounds``
+      which preserves the seed lowering exactly.  Outputs are bit-identical
+      either way.
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
 
         interpret = default_interpret()
+    if fused is None:
+        fused = not unroll_rounds
     n = w.shape[0]
     s = block_size
     if n % s:
@@ -72,6 +91,19 @@ def fw_staged(
     bm_eff, bn_eff = min(bm, n), min(bn, n)
     # Phase-2 band tile must divide the band length (e.g. n=640 → bt=320).
     bt_eff = _fit_block(n, 512)
+
+    if fused:
+        def round_body(b, w):
+            return fw_round(
+                w, b, block_size=s, bk=bk_eff, variant=variant,
+                semiring=semiring, interpret=interpret,
+            )
+
+        if unroll_rounds:
+            for b in range(n // s):
+                w = round_body(b, w)
+            return w
+        return jax.lax.fori_loop(0, n // s, round_body, w)
 
     def round_body(b, w):
         o = b * s

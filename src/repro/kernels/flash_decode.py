@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.utils import compat
+
 NEG_INF = -1e30
 
 
@@ -86,20 +88,18 @@ def flash_decode(
         bs = s
     scale = hd ** -0.5
     grid = (b, hkv, s // bs)
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-        scratch_shapes = [
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, 1), jnp.float32),
-            pltpu.VMEM((g, hd), jnp.float32),
-        ]
-    except Exception:  # pragma: no cover
-        compiler_params = None
-        scratch_shapes = []
+    # compiler params and scratch are independent concerns: the kernel
+    # *requires* its m/l/acc scratch refs (scratch_shapes=[] would call it
+    # with 3 missing arguments), while the dimension-semantics annotation is
+    # merely a lowering hint that may be absent on some jax versions.
+    compiler_params = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )
+    scratch_shapes = [
+        compat.vmem_scratch((g, 1), jnp.float32),
+        compat.vmem_scratch((g, 1), jnp.float32),
+        compat.vmem_scratch((g, hd), jnp.float32),
+    ]
     kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
     return pl.pallas_call(
         functools.partial(_decode_kernel, bs=bs, scale=scale),

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.semiring import MIN_PLUS, Semiring
+from repro.kernels.minplus_matmul import _fit_block
 
 
 def _row_kernel(d_ref, p_ref, o_ref, *, semiring: Semiring):
@@ -51,9 +52,10 @@ def fw_phase2_row(
 ) -> jax.Array:
     """Update the row band (s, n): band ⊕= diag ⊗ band, k sequential."""
     s, n = band.shape
-    bt = min(bt, n)
-    if n % bt:
-        raise ValueError(f"band width {n} not divisible by bt={bt}")
+    # Largest divisor of n that is <= bt, so any band length works with the
+    # default bt (e.g. n=640 → bt=320); the per-element k-chain is bt-
+    # independent, so results are bitwise identical across choices.
+    bt = _fit_block(n, bt)
     return pl.pallas_call(
         functools.partial(_row_kernel, semiring=semiring),
         out_shape=jax.ShapeDtypeStruct((s, n), band.dtype),
@@ -78,9 +80,7 @@ def fw_phase2_col(
 ) -> jax.Array:
     """Update the column band (n, s): band ⊕= band ⊗ diag, k sequential."""
     n, s = band.shape
-    bt = min(bt, n)
-    if n % bt:
-        raise ValueError(f"band height {n} not divisible by bt={bt}")
+    bt = _fit_block(n, bt)
     return pl.pallas_call(
         functools.partial(_col_kernel, semiring=semiring),
         out_shape=jax.ShapeDtypeStruct((n, s), band.dtype),

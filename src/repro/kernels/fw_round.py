@@ -1,0 +1,196 @@
+"""Fused multi-stage round kernel: one ``pallas_call`` per pivot round.
+
+The paper's 5× over the blocked baseline comes from running *all* phases of
+a round as one multi-stage kernel with a reduced on-chip working set, so the
+scheduler can hide panel-load latency behind compute.  The staged port
+(``core.staged.fw_staged``) instead dispatched 4+ ``pallas_call``s per round
+— phase 1, two phase-2 bands, phase 3 — with the closed pivot bands making a
+full HBM round-trip (plus ``dynamic_slice``/``dynamic_update_slice`` copies)
+between every pair of dispatches.  This kernel is the TPU re-derivation of
+the paper's fusion (and of the panel-streaming idiom in Rucci et al.'s
+blocked APSP on KNL):
+
+  * **one grid, all phases** — a single 1-D grid of ``T² + 2T - 1`` steps
+    (T = n/s tiles per side) covers the whole matrix; each program
+    classifies its step as diagonal closure (phase 1), row/col band closure
+    (phase 2), or full-matrix relaxation (phase 3) from ``program_id``
+    against the traced pivot index.
+  * **pivot-first visit order** — the tile each step owns is resolved
+    through two scalar-prefetch order arrays built from the traced pivot
+    ``b`` (``_round_order``): pivot tile first, then the 2(T-1) band tiles,
+    then every tile again for phase 3.  Scalar-prefetch index maps are how
+    Pallas lets a *data-dependent* schedule drive the DMA pipeline.
+  * **bands staged through scratch** — the closed diagonal and both closed
+    pivot bands live in VMEM scratch (``(s, n)`` + ``(n, s)``), written by
+    the phase-1/2 steps and re-read in ``bk``-deep slices by every phase-3
+    step, exactly as the paper streams m-deep panel slices through shared
+    memory.  Nothing closed in this round touches HBM until its final value
+    is known; cross-step communication never leaves the chip.
+
+Sequencing: the grid's only dimension is "arbitrary" (sequential on the
+TensorCore), and *all* cross-step dataflow is through scratch — no step
+reads an HBM block written earlier in the same round, so Pallas' input
+prefetch (which may run ahead of the previous step's output DMA) can never
+observe a stale tile.
+
+Bit-identity: every per-element ⊕/⊗ chain is evaluated in exactly the order
+of the 4-kernel lowering — phase 2 re-uses the same k-sequential recurrence,
+and phase 3 re-relaxes *every* tile (bands and diagonal included, with the
+closed values as accumulator input) through the same ``_stage_compute``
+bk-chunk sequence as ``semiring_matmul``'s k grid.  Outputs are therefore
+bitwise equal to ``fw_staged(unroll_rounds=True)`` for any semiring and
+dtype, not just up to tolerance (tests/test_fw_round.py).
+
+VMEM: scratch is ``2·s·n`` words + the double-buffered (s,s) in/out tiles —
+``plan.fused_round_vmem_bytes``; n ≲ 48k fits a 128 MB v5e core at s=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.semiring import MIN_PLUS, Semiring
+from repro.kernels.minplus_matmul import Variant, _fit_block, _stage_compute
+from repro.utils import compat
+
+
+def _round_order(b: jax.Array, T: int) -> tuple[jax.Array, jax.Array]:
+    """Tile-visit order for pivot round ``b``: (oi, oj), each (T²+2T-1,).
+
+    g=0 → pivot tile (b,b); g ∈ [1, T) → row-band tiles (b, j≠b);
+    g ∈ [T, 2T-1) → col-band tiles (i≠b, b); g ≥ 2T-1 → phase 3 over all
+    T² tiles in row-major order.  ``b`` is traced; the shapes are static.
+    """
+    b = jnp.asarray(b, jnp.int32)
+    nz = jnp.arange(T - 1, dtype=jnp.int32)
+    nz = jnp.where(nz < b, nz, nz + 1)  # 0..T-1 with b skipped
+    full = jnp.arange(T, dtype=jnp.int32)
+    oi = jnp.concatenate(
+        [b[None], jnp.full((T - 1,), b, jnp.int32), nz, jnp.repeat(full, T)]
+    )
+    oj = jnp.concatenate(
+        [b[None], nz, jnp.full((T - 1,), b, jnp.int32), jnp.tile(full, T)]
+    )
+    return oi, oj
+
+
+def _round_kernel(
+    oi_ref, oj_ref, w_ref, o_ref, row_ref, col_ref,
+    *, T: int, s: int, bk: int, semiring: Semiring, variant: Variant,
+):
+    g = pl.program_id(0)
+    i = oi_ref[g]
+    j = oj_ref[g]
+    b = oi_ref[0]  # the pivot index (step 0 visits the pivot tile)
+
+    @pl.when(g == 0)
+    def _phase1():
+        def body(k, t):
+            return semiring.add(t, semiring.mul(t[:, k, None], t[k, None, :]))
+
+        t = jax.lax.fori_loop(0, s, body, w_ref[...])
+        o_ref[...] = t
+        # Seed both scratch bands with the closed diagonal: phase-3 steps can
+        # then read A/B slices unconditionally at any tile index, pivot
+        # included (the splice fw_staged did with dynamic_update_slice).
+        pl.store(row_ref, (slice(None), pl.dslice(j * s, s)), t)
+        pl.store(col_ref, (pl.dslice(i * s, s), slice(None)), t)
+
+    @pl.when((g >= 1) & (g < T))
+    def _phase2_row():
+        d = pl.load(row_ref, (slice(None), pl.dslice(b * s, s)))
+
+        def body(k, p):
+            return semiring.add(p, semiring.mul(d[:, k, None], p[k, None, :]))
+
+        p = jax.lax.fori_loop(0, s, body, w_ref[...])
+        o_ref[...] = p
+        pl.store(row_ref, (slice(None), pl.dslice(j * s, s)), p)
+
+    @pl.when((g >= T) & (g < 2 * T - 1))
+    def _phase2_col():
+        d = pl.load(row_ref, (slice(None), pl.dslice(b * s, s)))
+
+        def body(k, p):
+            return semiring.add(p, semiring.mul(p[:, k, None], d[k, None, :]))
+
+        p = jax.lax.fori_loop(0, s, body, w_ref[...])
+        o_ref[...] = p
+        pl.store(col_ref, (pl.dslice(i * s, s), slice(None)), p)
+
+    @pl.when(g >= 2 * T - 1)
+    def _phase3():
+        a = pl.load(col_ref, (pl.dslice(i * s, s), slice(None)))   # closed (i,b)
+        bb = pl.load(row_ref, (slice(None), pl.dslice(j * s, s)))  # closed (b,j)
+        # Accumulator input: pivot-band tiles were rewritten this round, so
+        # their current value lives in scratch (== a/bb), not in w_ref.
+        c = jnp.where(i == b, bb, jnp.where(j == b, a, w_ref[...]))
+        for k0 in range(0, s, bk):
+            c = _stage_compute(
+                c, a[:, k0:k0 + bk], bb[k0:k0 + bk, :], semiring, variant
+            )
+        o_ref[...] = c
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "bk", "variant", "semiring", "interpret"),
+)
+def fw_round(
+    w: jax.Array,
+    b: jax.Array | int,
+    *,
+    block_size: int = 128,
+    bk: int = 32,
+    variant: Variant = "fori",
+    semiring: Semiring = MIN_PLUS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One fused pivot round: all three phases in a single ``pallas_call``.
+
+    w: (n, n) with n % block_size == 0; b: pivot round index (may be traced
+    — it only feeds the scalar-prefetch order arrays, never a shape).
+    bk: phase-3 staging depth (clamped to a divisor of block_size).
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    n = w.shape[0]
+    s = block_size
+    if w.shape != (n, n) or n % s:
+        raise ValueError(f"w must be (n,n) with n % {s} == 0, got {w.shape}")
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception as e:  # pragma: no cover - pallas TPU module absent
+        raise NotImplementedError(
+            "fw_round needs pallas TPU scratch + scalar prefetch"
+        ) from e
+    T = n // s
+    bk = _fit_block(s, bk)
+    oi, oj = _round_order(b, T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T * T + 2 * T - 1,),
+        in_specs=[pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g]))],
+        out_specs=pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g])),
+        scratch_shapes=[
+            pltpu.VMEM((s, n), w.dtype),  # closed row band (diag at col b)
+            pltpu.VMEM((n, s), w.dtype),  # closed col band (diag at row b)
+        ],
+    )
+    kern = functools.partial(
+        _round_kernel, T=T, s=s, bk=bk, semiring=semiring, variant=variant
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, n), w.dtype),
+        interpret=interpret,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",)
+        ),
+    )(oi, oj, w)

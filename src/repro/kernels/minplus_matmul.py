@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.semiring import MIN_PLUS, Semiring
+from repro.utils import compat
 
 Variant = Literal["fori", "unroll", "broadcast"]
 
@@ -102,14 +103,9 @@ def _fit_block(dim: int, want: int) -> int:
 
 
 def _grid_call(kernel, out_shape, grid, in_specs, out_specs, interpret, *args):
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-    except Exception:  # pragma: no cover - older pallas versions
-        compiler_params = None
+    compiler_params = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary")
+    )
     return pl.pallas_call(
         kernel,
         out_shape=out_shape,

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.models.layers import apply_norm
 from repro.models.moe import _positions_in_expert, moe_ffn
+from repro.utils import compat
 from repro.utils import sharding as shd
 
 
@@ -136,13 +137,12 @@ def moe_ffn_a2a(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax
         return y.reshape(bl, sl, d), f_e, p_e
 
     h_in = apply_norm(x, p["norm"], cfg)
-    y, f_e, p_e = jax.shard_map(
+    y, f_e, p_e = compat.shard_map(
         inner,
         mesh=mesh,
         in_specs=(P(dp_spec, tp, None), P(None, None), P(tp, None, None),
                   P(tp, None, None), P(tp, None, None)),
         out_specs=(P(dp_spec, tp, None), P(), P()),
-        check_vma=False,
     )(h_in, p["router"], p["w1"], p["w3"], p["w2"])
 
     if m.n_shared:

@@ -1,0 +1,70 @@
+"""jax-version compatibility shims, shared across the whole library.
+
+jax moved two APIs this codebase leans on:
+
+  * ``shard_map``: ``jax.experimental.shard_map.shard_map(check_rep=...)``
+    became ``jax.shard_map(check_vma=...)``.  ``shard_map`` here dispatches on
+    whichever exists (PR 1 carried this shim privately in
+    ``core.distributed``; the MoE a2a layer needs it too, so it lives here
+    now and both import it).
+  * Pallas TPU compiler params: ``pltpu.TPUCompilerParams`` was renamed
+    ``pltpu.CompilerParams``.  Kernels that guarded the whole lowering-params
+    *and* scratch-shape setup behind one ``try: pltpu.CompilerParams``
+    silently lost their VMEM scratch refs on jax 0.4.x and crashed at trace
+    time (the flash_decode tier-1 failures) — ``tpu_compiler_params`` and
+    ``vmem_scratch`` split the two concerns so a missing params class can
+    never take the scratch wiring down with it.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions (check_vma was check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def tpu_compiler_params(*, dimension_semantics: Sequence[str]) -> Any | None:
+    """Pallas TPU CompilerParams under either name; None when unavailable.
+
+    A ``None`` return is safe to pass to ``pl.pallas_call`` — the kernel
+    still lowers, it just loses the parallel/arbitrary grid annotations.
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception:  # pragma: no cover - pallas TPU module absent
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:  # pragma: no cover - very old pallas
+        return None
+    return cls(dimension_semantics=tuple(dimension_semantics))
+
+
+def vmem_scratch(shape: tuple[int, ...], dtype) -> Any:
+    """A ``pltpu.VMEM`` scratch allocation spec.
+
+    Raises ``NotImplementedError`` when the pallas TPU module is missing
+    entirely, so callers can choose an explicit fallback instead of silently
+    dropping the scratch refs their kernel signature requires.
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, dtype)
+    except Exception as e:  # pragma: no cover - pallas TPU module absent
+        raise NotImplementedError(
+            "pallas TPU scratch (pltpu.VMEM) unavailable in this jax"
+        ) from e

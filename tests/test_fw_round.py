@@ -1,0 +1,224 @@
+"""Fused multi-stage round kernel (kernels.fw_round) acceptance surface.
+
+  * bit-identity: the fused one-dispatch round is bitwise equal to the seed
+    4-kernel lowering (``fw_staged(unroll_rounds=True, fused=False)``)
+    across semirings, dtypes, and round counts — not merely allclose;
+  * per-round pallas_call count drops from 4 to 1 in the jaxpr;
+  * arbitrary (non-power-of-two) n round-trips through ``solve`` padding;
+  * the phase-2 band kernels fit their tile to any n (regression for the
+    ``n % bt`` crash at default bt=512);
+  * the plan-layer VMEM/occupancy model and autotune sweep are coherent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apsp import plan, solve
+from repro.core.floyd_warshall import fw_naive
+from repro.core.graph import random_digraph
+from repro.core.semiring import MAX_MIN, MIN_PLUS, SEMIRINGS
+from repro.core.staged import fw_staged
+from repro.kernels.fw_phase1 import fw_phase1
+from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
+from repro.kernels.fw_round import _round_order, fw_round
+from repro.kernels.minplus_matmul import semiring_matmul
+from repro.kernels.ref import fw_phase2_col_ref, fw_phase2_row_ref
+
+
+def _graph(n, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(1.0, 10.0, size=(n, n)).astype(np.float32)
+    np.fill_diagonal(w, 0.0)
+    return jnp.asarray(w, dtype)
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    """pallas_call *call sites*, recursing into sub-jaxprs per site."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)  # unwrap ClosedJaxpr
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            count += 1
+        for v in eqn.params.values():
+            for sub in v if isinstance(v, (list, tuple)) else (v,):
+                if hasattr(sub, "eqns") or hasattr(sub, "jaxpr"):
+                    count += _count_pallas_calls(sub)
+    return count
+
+
+# ------------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+def test_fused_matches_seed_lowering_bitwise(name):
+    """The tentpole: fused fori round == seed unrolled 4-kernel round,
+    bit for bit, for every semiring (idempotent or not)."""
+    sr = SEMIRINGS[name]
+    rng = np.random.default_rng(17)
+    if name == "or_and":
+        w = (rng.uniform(size=(96, 96)) < 0.1).astype(np.float32)
+        np.fill_diagonal(w, 1.0)
+    elif name == "plus_mul":
+        w = rng.uniform(0.0, 0.01, size=(96, 96)).astype(np.float32)
+    else:
+        w = rng.uniform(1.0, 10.0, size=(96, 96)).astype(np.float32)
+        np.fill_diagonal(w, 0.0)
+    w = jnp.asarray(w)
+    kw = dict(block_size=32, bm=32, bn=32, bk=16, semiring=sr, interpret=True)
+    fused = fw_staged(w, **kw)  # fused fori is the default lowering
+    seed = fw_staged(w, unroll_rounds=True, fused=False, **kw)
+    assert np.array_equal(np.asarray(fused), np.asarray(seed))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sr", [MIN_PLUS, MAX_MIN], ids=["min_plus", "max_min"])
+def test_fused_bit_identity_dtypes(sr, dtype):
+    w = _graph(128, seed=5, dtype=dtype)
+    kw = dict(block_size=32, bk=32, semiring=sr, interpret=True)
+    fused = fw_staged(w, **kw)
+    seed = fw_staged(w, unroll_rounds=True, fused=False, **kw)
+    assert fused.dtype == dtype
+    assert np.array_equal(np.asarray(fused, np.float32),
+                          np.asarray(seed, np.float32))
+
+
+@pytest.mark.parametrize("n,s,bk", [(96, 32, 8), (64, 64, 64), (160, 32, 32)])
+def test_fw_round_matches_legacy_round_sequence(n, s, bk):
+    """Round-by-round: one fw_round call == the 4-dispatch phase sequence."""
+
+    def legacy_round(w, b):
+        o = b * s
+        diag = fw_phase1(jax.lax.dynamic_slice(w, (o, o), (s, s)), interpret=True)
+        rb = fw_phase2_row(diag, jax.lax.dynamic_slice(w, (o, 0), (s, n)),
+                           interpret=True)
+        rb = jax.lax.dynamic_update_slice(rb, diag, (0, o))
+        cb = fw_phase2_col(diag, jax.lax.dynamic_slice(w, (0, o), (n, s)),
+                           interpret=True)
+        cb = jax.lax.dynamic_update_slice(cb, diag, (o, 0))
+        w = jax.lax.dynamic_update_slice(w, rb, (o, 0))
+        w = jax.lax.dynamic_update_slice(w, cb, (0, o))
+        return semiring_matmul(cb, rb, w, bm=min(256, n), bn=min(256, n),
+                               bk=min(bk, s), interpret=True)
+
+    wl = wf = _graph(n, seed=n)
+    for b in range(n // s):
+        wl = legacy_round(wl, b)
+        wf = fw_round(wf, b, block_size=s, bk=bk, interpret=True)
+        assert np.array_equal(np.asarray(wl), np.asarray(wf)), f"round {b}"
+
+
+# -------------------------------------------------------- solve() integration
+@pytest.mark.parametrize("n", [90, 100])
+def test_solve_fused_non_pow2_n(n):
+    w = random_digraph(n, density=0.4, seed=n)
+    res = solve(w, method="fused", block_size=32)
+    assert res.method == "fused" and res.dist.shape == (n, n)
+    assert res.padded_n % 32 == 0
+    want = np.asarray(fw_naive(jnp.asarray(w)))
+    np.testing.assert_allclose(np.asarray(res.dist), want, rtol=1e-5, atol=1e-5)
+
+
+def test_solve_fused_batched_matches_per_graph():
+    wb = np.stack([random_digraph(70, density=0.4, seed=i) for i in range(3)])
+    res = solve(wb, method="fused", block_size=32)
+    assert res.batched and res.dist.shape == (3, 70, 70)
+    for i in range(3):
+        single = solve(wb[i], method="fused", block_size=32)
+        assert np.array_equal(np.asarray(res.dist[i]), np.asarray(single.dist))
+
+
+def test_single_round_graph():
+    # T=1: the whole matrix is the pivot tile; phase 1 + its self-relaxation.
+    w = _graph(32, seed=2)
+    fused = fw_staged(w, block_size=32, interpret=True)
+    seed = fw_staged(w, block_size=32, unroll_rounds=True, fused=False,
+                     interpret=True)
+    assert np.array_equal(np.asarray(fused), np.asarray(seed))
+
+
+def test_fw_round_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        fw_round(jnp.zeros((48, 48)), 0, block_size=32, interpret=True)
+    with pytest.raises(ValueError):
+        fw_round(jnp.zeros((32, 48)), 0, block_size=16, interpret=True)
+
+
+# --------------------------------------------------------- trace/dispatch size
+def test_per_round_dispatch_count_dropped():
+    """The acceptance criterion: ≥4 pallas_calls per round → 1."""
+
+    def trace(n, **kw):
+        w = jnp.zeros((n, n), jnp.float32)
+        return jax.make_jaxpr(
+            lambda x: fw_staged(x, block_size=128, interpret=True, **kw)
+        )(w)
+
+    rounds = 512 // 128
+    # unrolled traces expose the per-round count directly:
+    assert _count_pallas_calls(trace(512, unroll_rounds=True, fused=True)) == rounds
+    assert _count_pallas_calls(trace(512, unroll_rounds=True, fused=False)) == 4 * rounds
+    # and the fori lowering holds exactly ONE pallas_call total:
+    assert _count_pallas_calls(trace(512)) == 1
+    assert _count_pallas_calls(trace(2048)) == 1
+
+
+def test_round_order_covers_every_tile():
+    for T, b in [(1, 0), (3, 0), (3, 2), (5, 3)]:
+        oi, oj = _round_order(jnp.int32(b), T)
+        oi, oj = np.asarray(oi), np.asarray(oj)
+        assert oi.shape == (T * T + 2 * T - 1,)
+        # step 0 is the pivot tile; band steps precede all phase-3 steps.
+        assert (oi[0], oj[0]) == (b, b)
+        assert (oi[1:T] == b).all() and (oj[T:2 * T - 1] == b).all()
+        # phase 3 visits every tile exactly once.
+        p3 = set(zip(oi[2 * T - 1:].tolist(), oj[2 * T - 1:].tolist()))
+        assert p3 == {(i, j) for i in range(T) for j in range(T)}
+
+
+# -------------------------------------------- phase-2 band fitting regression
+def test_phase2_fits_block_to_any_n():
+    # Default bt=512 used to raise for any n not divisible by it (n=640).
+    s, n = 32, 640
+    diag = fw_phase1(_graph(s, seed=1), interpret=True)
+    band = jnp.asarray(np.random.default_rng(2).uniform(1, 10, (s, n)),
+                       jnp.float32)
+    got = fw_phase2_row(diag, band, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(fw_phase2_row_ref(diag, band)))
+    got = fw_phase2_col(diag, band.T, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(fw_phase2_col_ref(diag, band.T)))
+
+
+# ------------------------------------------------------------ plan-layer model
+def test_plan_fused_model():
+    # scratch bands dominate: 2·s·n + 2·2·s² words.
+    assert plan.fused_round_vmem_bytes(1024, 128, 32) == (
+        (2 * 128 * 1024 + 4 * 128 * 128) * 4
+    )
+    # broadcast variant adds the (s, bk, s) product transient.
+    assert plan.fused_round_vmem_bytes(1024, 128, 32, variant="broadcast") == (
+        (2 * 128 * 1024 + 4 * 128 * 128 + 128 * 32 * 128) * 4
+    )
+    assert plan.fused_round_steps(1024, 128) == 8 * 8 + 2 * 8 - 1
+    # one read + one write per grid step, (s,s) words each.
+    assert plan.fused_round_hbm_bytes(1024, 128) == 2 * 79 * 128 * 128 * 4
+
+
+def test_plan_candidates_and_autotune():
+    cands = plan.fw_candidates(1024)
+    assert cands and all(c["vmem_bytes"] <= 128 << 20 for c in cands)
+    assert {c["impl"] for c in cands} == {"fused", "staged"}
+    # a tiny budget filters the fat fused scratch but keeps small tiles.
+    tight = plan.fw_candidates(1024, vmem_budget=300 * 1024)
+    assert tight and all(c["vmem_bytes"] <= 300 * 1024 for c in tight)
+    # model ranking: total-traffic ordering, fused preferred on ties.
+    ranked = plan.autotune_fw(1024)
+    totals = [c["hbm_bytes_total"] for c in ranked]
+    assert totals == sorted(totals)
+    assert ranked[0]["impl"] == "fused"
+    # measured ranking consumes a callback and sorts by it.
+    measured = plan.autotune_fw(
+        256, measure=lambda c: c["block_size"] * 1e-6, top=3
+    )
+    assert [c["us"] for c in measured] == sorted(c["us"] for c in measured)
+    assert all("us" in c for c in measured)
