@@ -2,35 +2,66 @@
 
     PYTHONPATH=src python examples/apsp_routing.py
 
-Computes full routing tables (next-hop matrices) for a grid network with a
-failed link via ``repro.apsp.solve(successors=True)`` — the blocked kernel
-path, not the O(n³)-sweep naive loop — and reports reroute paths.  The two
-scenarios (healthy / failed link) run as one *batched* solve.  Also
-demonstrates the OR-AND semiring (transitive closure = reachability)
-through the same front-end, with padding handled internally.
+The "many users, many graphs" serving story end to end: a
+``serve.engine.RoutingEngine`` session fronts an ``ApspEngine`` pinned to
+the fused round kernel, several network topologies of *different sizes*
+are registered (a healthy grid, the same grid with a failed core link, and
+a larger ring), and one ``refresh`` call re-solves all of them through one
+bucketed ``solve_many`` — ragged sizes pad into per-bucket batches, each
+bucket running distances AND next-hop successor matrices through the fused
+round's native batch grid (one dispatch chain per bucket, not per graph).
+A burst of path queries is then answered from the cached routing tables
+without touching the device again.  A live link failure (``fail_link``)
+marks only that graph dirty; the next query triggers a one-graph
+incremental refresh.
+
+Also demonstrates the OR-AND semiring (transitive closure = reachability)
+through the stateless ``apsp.solve`` front-end, padding handled internally.
 """
 import numpy as np
 
 from repro.apsp import solve
-from repro.core.graph import grid_graph
-from repro.core.paths import extract_path
+from repro.core.graph import grid_graph, ring_graph
+from repro.serve.engine import RoutingEngine
+
 
 def main():
     side = 6
     n = side * side
     w = grid_graph(side)
 
-    # Fail the link between node 14 and 15 (middle of the grid).
+    # Scenario graphs of different sizes: ragged sizes bucket into padded
+    # batches inside ApspEngine.solve_many — one device dispatch per bucket.
     w_failed = w.copy()
     w_failed[14, 15] = np.inf
     w_failed[15, 14] = np.inf
 
-    # One batched solve over both scenarios; next-hops from the blocked path.
-    res = solve(np.stack([w, w_failed]), successors=True, method="blocked")
-    for i, name in enumerate(("healthy", "link 14-15 failed")):
-        d, succ = np.asarray(res.dist[i]), np.asarray(res.succ[i])
-        path = extract_path(succ, 12, 17)
-        print(f"[{name}] route 12→17: {path} (cost {d[12,17]:.0f})")
+    # method="fused" pins the one-dispatch-per-round kernel (its batch grid
+    # carries each bucket; on CPU the bitwise XLA lowering executes it).
+    router = RoutingEngine(method="fused")
+    router.add_graph("grid/healthy", w)
+    router.add_graph("grid/link-14-15-down", w_failed)
+    router.add_graph("ring/backbone", ring_graph(50))
+    refreshed = router.refresh()
+    stats = router.engine.stats
+    print(f"refreshed {refreshed} graphs in {stats.solves} batched solve(s) "
+          f"(plan cache: {stats.misses} compiled, {stats.hits} hits)")
+
+    # A query burst served entirely from the cached successor tables.
+    for reply in router.query_many([
+        ("grid/healthy", 12, 17),
+        ("grid/link-14-15-down", 12, 17),
+        ("ring/backbone", 0, 37),
+    ]):
+        print(f"[{reply.graph_id}] route {reply.src}→{reply.dst}: "
+              f"{reply.path} (cost {reply.cost:.0f})")
+
+    # A live mutation: failing another link dirties ONLY that graph; the
+    # next query refreshes it (one-graph batch) and reroutes.
+    router.fail_link("grid/healthy", 13, 14)
+    reply = router.query("grid/healthy", 12, 17)
+    print(f"[grid/healthy after 13-14 down] route 12→17: {reply.path} "
+          f"(cost {reply.cost:.0f})")
 
     # Reachability via the boolean semiring on the same staged kernels;
     # solve() pads the 36-vertex graph to the tile size internally.
@@ -39,6 +70,7 @@ def main():
     reach = np.asarray(solve(adj, method="staged", semiring="or_and").dist)
     print(f"transitive closure: {int(reach.sum())} reachable pairs "
           f"(expected {n*n} on a connected grid)")
+
 
 if __name__ == "__main__":
     main()

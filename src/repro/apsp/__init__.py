@@ -1,26 +1,38 @@
-"""repro.apsp — the unified APSP solver front-end.
+"""repro.apsp — the unified APSP solver front-end and execution engine.
 
-    from repro.apsp import solve
+    from repro.apsp import solve, ApspEngine
     res = solve(w)                       # any n, any method, auto-padded
-    res = solve(w_batch, method="blocked", successors=True)
+    res = solve(w_batch, method="fused") # native batch grid, one dispatch/round
 
-``solve`` is the one entry point over the paper's implementation ladder
-(numpy / naive / blocked / staged / fused / distributed); ``plan`` holds the
-shared block-size / padding / roofline / autotune arithmetic.
+    eng = ApspEngine()                   # serving sessions: repeated solves
+    results = eng.solve_many(graphs)     # ragged sizes, bucketed + cached
+
+``api.solve`` is the stateless entry point over the paper's implementation
+ladder (numpy / naive / blocked / staged / fused / distributed);
+``engine.ApspEngine`` owns the plan/executable cache and ragged-batch
+bucketing for repeated solves; ``plan`` holds the shared block-size /
+padding / roofline / autotune arithmetic (batch-aware).
 """
 from repro.apsp import plan
-from repro.apsp.solver import (
+from repro.apsp.api import (
     METHODS,
+    SUCCESSOR_METHODS,
     APSPResult,
     NegativeCycleError,
     negative_cycle_mask,
     solve,
 )
+from repro.apsp.engine import ApspEngine, EngineStats, ExecutablePlan, PlanKey
 
 __all__ = [
     "APSPResult",
+    "ApspEngine",
+    "EngineStats",
+    "ExecutablePlan",
     "METHODS",
+    "SUCCESSOR_METHODS",
     "NegativeCycleError",
+    "PlanKey",
     "negative_cycle_mask",
     "plan",
     "solve",

@@ -1,0 +1,295 @@
+"""Unified APSP front-end: ``solve`` owns padding, dispatch, and batching.
+
+Every caller used to hand-roll the same steps: pad n to a tile multiple,
+pick a method and block size, run, unpad, verify.  ``solve`` owns all of it:
+
+  * **pad/unpad** — arbitrary n; padding vertices are ⊕-identity rows/cols
+    with ⊗-identity diagonal, so they are unreachable under any semiring and
+    the top-left n×n of the padded closure equals the closure of the input.
+  * **dispatch** — ``method="auto"`` picks a sensible rung of the paper's
+    implementation ladder for the input size and backend; explicit names
+    ("numpy" | "naive" | "blocked" | "staged" | "fused" | "distributed")
+    pin one ("fused" = staged with the single-dispatch fused round kernel).
+  * **batching** — a (B, n, n) input runs all B graphs through the kernels'
+    *native* batch grid (staged/fused: one dispatch per round for the whole
+    batch; blocked/naive: one vmap-ed computation); results match per-graph
+    solves bit-for-bit.
+  * **successors** — ``successors=True`` tracks next-hop matrices natively
+    through the fused round kernel (``fw_staged_with_successors``) or the
+    blocked/naive paths; no more fused→blocked fallback.
+  * **validation** — min-plus solves raise ``NegativeCycleError`` when the
+    result certifies a negative cycle (a strictly negative diagonal entry).
+
+``solve`` is stateless: every call re-plans and re-pads.  For repeated or
+ragged-batch workloads use ``repro.apsp.engine.ApspEngine``, which caches
+the plan/executable per (n_padded, B, dtype, semiring, method, block dims)
+key and buckets ragged graph sets into padded batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apsp import plan
+from repro.core.floyd_warshall import fw_blocked, fw_naive, fw_numpy
+from repro.core.paths import fw_blocked_with_successors, fw_with_successors
+from repro.core.semiring import MIN_PLUS, SEMIRINGS, Semiring
+from repro.core.staged import fw_staged, fw_staged_with_successors
+from repro.kernels.ops import default_interpret as _default_interpret
+
+METHODS = ("auto", "numpy", "naive", "blocked", "staged", "fused", "distributed")
+
+# Methods that can track next-hop successor matrices (min-plus only).
+SUCCESSOR_METHODS = ("naive", "blocked", "staged", "fused")
+
+# Below this size a padded tile pass does more work than the n sweeps of the
+# naive kernel; "auto" stays on the naive rung.
+_NAIVE_CUTOFF = 64
+
+
+class NegativeCycleError(ValueError):
+    """The distance matrix certifies a negative cycle (diag < 0)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class APSPResult:
+    """Outcome of ``solve``: distances plus how they were computed.
+
+    dist: (n, n) or (B, n, n) closure, unpadded.
+    succ: next-hop matrix of the same shape (None unless successors=True);
+          succ[i, j] = -1 where no i→j path exists.
+    """
+
+    dist: jax.Array | np.ndarray
+    succ: jax.Array | np.ndarray | None
+    method: str
+    semiring: str
+    block_size: int | None
+    n: int
+    padded_n: int
+
+    @property
+    def batched(self) -> bool:
+        return np.ndim(self.dist) == 3
+
+
+def negative_cycle_mask(dist) -> jax.Array:
+    """Per-graph bool: does the (…, n, n) closure certify a negative cycle?"""
+    diag = jnp.diagonal(jnp.asarray(dist), axis1=-2, axis2=-1)
+    return jnp.any(diag < 0, axis=-1)
+
+
+def _resolve_semiring(semiring: Semiring | str) -> Semiring:
+    if isinstance(semiring, str):
+        try:
+            return SEMIRINGS[semiring]
+        except KeyError:
+            raise ValueError(
+                f"unknown semiring {semiring!r}; have {sorted(SEMIRINGS)}"
+            ) from None
+    return semiring
+
+
+def _resolve_method(method: str, n: int, successors: bool) -> str:
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; have {METHODS}")
+    if method != "auto":
+        return method
+    if n <= _NAIVE_CUTOFF:
+        return "naive"
+    # The Pallas kernels run natively on TPU; on CPU they interpret (slow),
+    # so auto prefers the jnp blocked path there.  The same split applies to
+    # successor tracking: fused-with-successors on TPU, blocked on CPU.
+    if successors:
+        return "fused" if jax.default_backend() == "tpu" else "blocked"
+    return "staged" if jax.default_backend() == "tpu" else "blocked"
+
+
+def _resolve_shape(
+    method: str, n: int, successors: bool, block_size: int | None
+) -> tuple[str, int | None, int]:
+    """(method, block_size, n_padded) — THE dispatch-and-padding policy.
+
+    Shared by the stateless ``solve`` and the engine's plan/bucket keys so
+    the two can never pad or dispatch differently for the same input
+    (``solve`` overrides the padded size for method="distributed", whose
+    multiple depends on the mesh).
+    """
+    meth = _resolve_method(method, n, successors)
+    if meth in ("blocked", "staged", "fused"):
+        s = block_size or plan.auto_block_size(n)
+        return meth, s, plan.padded_size(n, s)
+    return meth, None, n
+
+
+def _coerce(w, semiring: Semiring):
+    """np/jnp coercion + int→float promotion shared by solve and the engine.
+
+    Integer matrices cannot represent the ±inf identities of the tropical
+    semirings: padding / missing edges would wrap on ⊗ (INT_MAX + w < 0)
+    and silently shorten paths.  Promote once, up front.
+    """
+    arr = np.asarray(w) if isinstance(w, (np.ndarray, list, tuple)) else w
+    if arr.ndim not in (2, 3) or arr.shape[-1] != arr.shape[-2]:
+        raise ValueError(f"w must be (n,n) or (B,n,n), got {arr.shape}")
+    if not jnp.issubdtype(arr.dtype, jnp.floating) and not (
+        np.isfinite(semiring.zero) and np.isfinite(semiring.one)
+    ):
+        arr = arr.astype(np.float32)
+    return arr
+
+
+def _pad(w: jax.Array, m: int, semiring: Semiring) -> jax.Array:
+    """Pad (…, n, n) to (…, m, m) with ⊕-identity edges, ⊗-identity diag."""
+    n = w.shape[-1]
+    if m == n:
+        return w
+    widths = [(0, 0)] * (w.ndim - 2) + [(0, m - n), (0, m - n)]
+    out = jnp.pad(w, widths, constant_values=semiring.zero)
+    idx = jnp.arange(n, m)
+    return out.at[..., idx, idx].set(jnp.asarray(semiring.one, out.dtype))
+
+
+def _check_negative_cycles(dist, batched: bool) -> None:
+    bad = np.asarray(negative_cycle_mask(dist))
+    if bad.any():
+        which = f"graphs {np.flatnonzero(bad).tolist()}" if batched else "graph"
+        raise NegativeCycleError(f"negative cycle detected in {which}")
+
+
+def _check_successor_args(meth: str, semiring: Semiring) -> None:
+    if semiring is not MIN_PLUS:
+        raise ValueError("successors=True requires the min_plus semiring")
+    if meth not in SUCCESSOR_METHODS:
+        raise ValueError(
+            f"successors=True supports methods {SUCCESSOR_METHODS}, not {meth!r}"
+        )
+
+
+def solve(
+    w,
+    *,
+    method: str = "auto",
+    semiring: Semiring | str = MIN_PLUS,
+    successors: bool = False,
+    block_size: int | None = None,
+    validate: bool = True,
+    mesh=None,
+    row_axes="data",
+    col_axes="model",
+    variant: str = "fori",
+    interpret: bool | None = None,
+) -> APSPResult:
+    """All-pairs shortest paths (semiring closure) of one or many graphs.
+
+    w: (n, n) adjacency matrix, or (B, n, n) for a batch of graphs; missing
+       edges are the semiring ⊕-identity (+inf for min-plus).  Any n — the
+       solver pads to the tile multiple and unpads the result.  Integer
+       matrices are promoted to float32 when the semiring identities are
+       non-finite (min-plus & friends) — ints cannot encode +inf.
+    method: "auto" | "numpy" | "naive" | "blocked" | "staged" | "fused" |
+       "distributed" ("fused" pins the one-pallas_call-per-round kernel;
+       "staged" defaults to it too and falls back per fw_staged).
+    successors: also return next-hop matrices (min-plus only; native in the
+       fused/staged round kernel as well as the blocked/naive paths).
+    block_size: pivot-tile size for blocked/staged/distributed (None = auto).
+    validate: raise ``NegativeCycleError`` on a negative diagonal (min-plus
+       only; forces a host sync).
+    mesh/row_axes/col_axes: device mesh for method="distributed".
+    variant/interpret: staged-kernel lowering knobs (passed through).
+    """
+    sr = _resolve_semiring(semiring)
+    arr = _coerce(w, sr)
+    batched = arr.ndim == 3
+    n = arr.shape[-1]
+    meth, s, m = _resolve_shape(method, n, successors, block_size)
+
+    if successors:
+        _check_successor_args(meth, sr)
+    if meth == "distributed":
+        if batched:
+            raise ValueError("method='distributed' does not support batched input")
+        if mesh is None:
+            raise ValueError("method='distributed' requires a mesh")
+    if meth == "numpy" and sr is not MIN_PLUS:
+        raise ValueError("method='numpy' implements min_plus only")
+
+    if meth == "distributed":
+        # The padding multiple depends on the mesh factorization, not just
+        # the tile size — resolved here rather than in _resolve_shape.
+        from repro.core.distributed import _axis_size
+
+        s = block_size or plan.auto_block_size(n)
+        mult = plan.distributed_multiple(
+            s, _axis_size(mesh, row_axes), _axis_size(mesh, col_axes)
+        )
+        m = plan.padded_size(n, mult)
+
+    # --- run ------------------------------------------------------------
+    succ = None
+    if meth == "numpy":
+        dist = (
+            np.stack([fw_numpy(g) for g in arr]) if batched else fw_numpy(arr)
+        )
+    elif meth == "naive":
+        wj = jnp.asarray(arr)
+        if successors:
+            run = fw_with_successors
+            dist, succ = jax.vmap(run)(wj) if batched else run(wj)
+        else:
+            run = lambda x: fw_naive(x, semiring=sr)
+            dist = jax.vmap(run)(wj) if batched else run(wj)
+    else:
+        wp = _pad(jnp.asarray(arr), m, sr)
+        if meth == "blocked":
+            if successors:
+                run = lambda x: fw_blocked_with_successors(x, block_size=s)
+                out = jax.vmap(run)(wp) if batched else run(wp)
+                dist, succ = out
+            else:
+                run = lambda x: fw_blocked(x, block_size=s, semiring=sr)
+                dist = jax.vmap(run)(wp) if batched else run(wp)
+        elif meth in ("staged", "fused"):
+            # Natively batched: a (B, m, m) input threads the kernels'
+            # leading batch grid dimension — one dispatch per round for the
+            # whole batch, not a vmap that replays rounds per graph.  With
+            # no TPU and no explicit interpret request, the fused round runs
+            # its bitwise XLA lowering instead of the Pallas interpreter
+            # (kernels.ref — execution-grade on CPU, same op chains).
+            use_ref = interpret is None and _default_interpret()
+            if successors:
+                dist, succ = fw_staged_with_successors(
+                    wp, block_size=s, interpret=interpret,
+                    lowering="ref" if use_ref else "pallas",
+                )
+            else:
+                # "staged" leaves the round lowering to fw_staged (fused by
+                # default); "fused" pins the single-dispatch round kernel.
+                dist = fw_staged(
+                    wp, block_size=s, semiring=sr, variant=variant,
+                    interpret=interpret,
+                    fused="ref" if use_ref
+                    else (True if meth == "fused" else None),
+                )
+        else:  # distributed
+            from repro.core.distributed import fw_distributed
+
+            out = fw_distributed(
+                wp, mesh, block_size=s, row_axes=row_axes, col_axes=col_axes,
+                semiring=sr,
+            )
+            dist = jnp.asarray(jax.device_get(out))
+        dist = dist[..., :n, :n]
+        if succ is not None:
+            succ = succ[..., :n, :n]
+
+    if validate and sr is MIN_PLUS:
+        _check_negative_cycles(dist, batched)
+
+    return APSPResult(
+        dist=dist, succ=succ, method=meth, semiring=sr.name,
+        block_size=s, n=n, padded_n=m,
+    )

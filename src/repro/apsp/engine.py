@@ -1,0 +1,368 @@
+"""Batched APSP execution engine: plan/executable cache + ragged bucketing.
+
+``api.solve`` is stateless — every call re-plans, re-pads, and re-enters
+``jax.jit``.  Serving workloads (ROADMAP north star: many users, many
+graphs, repeated solves) look different: the same (n, B, dtype) shapes
+recur thousands of times, and request batches arrive *ragged* (mixed graph
+sizes).  ``ApspEngine`` is the session object for that regime:
+
+  * **plan/executable cache** — each distinct
+    ``(n_padded, batch, dtype, semiring, method, block dims)`` key is
+    planned once: block size and batch block resolved, VMEM/HBM modeled
+    (``plan.fused_round_vmem_bytes(batch=…)``), and a jitted runner built.
+    Repeated solves on the same key skip planning AND tracing entirely —
+    ``ExecutablePlan.traces`` counts actual retraces (it increments only
+    while JAX traces the runner), so tests can assert cache hits compile
+    nothing.
+  * **``solve_many``** — takes a ragged list of graphs, buckets them by
+    ``(method, n_padded, block_size, dtype)``, pads each bucket into one
+    (B, m, m) batch, and runs each bucket through the kernels' native batch
+    grid (one dispatch per round for the whole bucket).  Results come back
+    in input order and match per-graph ``solve`` bit-for-bit — bucketing is
+    a scheduling decision, never a numerics decision.
+  * **successors** — ``solve_many(successors=True)`` threads the fused
+    successor round (``fw_staged_with_successors``) per bucket, the
+    batched-routing-tables scenario ``serve.engine.RoutingEngine`` builds
+    on.
+
+The engine is single-process state; it holds no device buffers beyond
+JAX's own executable cache.  Thread-safety is the caller's concern (the
+serving layer serializes refreshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apsp import plan
+from repro.apsp.api import (
+    APSPResult,
+    METHODS,
+    NegativeCycleError,
+    _check_negative_cycles,
+    _check_successor_args,
+    _coerce,
+    _pad,
+    _resolve_semiring,
+    _resolve_shape,
+)
+from repro.core.floyd_warshall import fw_blocked, fw_naive, fw_numpy
+from repro.core.paths import fw_blocked_with_successors, fw_with_successors
+from repro.core.semiring import MIN_PLUS, Semiring
+from repro.core.staged import fw_staged, fw_staged_with_successors
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanKey:
+    """The executable-cache key: everything that changes the compiled code."""
+
+    n_padded: int
+    batch: int
+    dtype: str
+    semiring: str
+    method: str
+    block_size: int | None
+    bk: int
+    batch_block: int | None
+    successors: bool
+
+
+@dataclasses.dataclass
+class ExecutablePlan:
+    """A planned, compiled (on first use) batched solve.
+
+    runner: padded (batch, m, m) → padded dist (or (dist, succ)).
+    traces: number of times JAX actually traced the runner — stays at 1 for
+            a warm cache entry (the no-recompile guarantee tests assert).
+    vmem_bytes / hbm_bytes_per_round: the plan-layer model for the fused
+            round at this key (None for non-kernel methods).
+    """
+
+    key: PlanKey
+    runner: Callable[[jax.Array], Any]
+    vmem_bytes: int | None = None
+    hbm_bytes_per_round: float | None = None
+    traces: int = 0
+
+
+@dataclasses.dataclass
+class EngineStats:
+    hits: int = 0
+    misses: int = 0
+    solves: int = 0
+    graphs_solved: int = 0
+
+
+class ApspEngine:
+    """Session object owning the plan/executable cache for repeated solves.
+
+        eng = ApspEngine()
+        res = eng.solve(w)                    # same surface as apsp.solve
+        results = eng.solve_many(graphs)      # ragged batch, auto-bucketed
+        tables = eng.solve_many(graphs, successors=True)   # routing tables
+
+    Construction pins the solve configuration (method, semiring, block
+    dims); per-call shape/dtype variation is absorbed by the cache.
+    """
+
+    def __init__(
+        self,
+        *,
+        method: str = "auto",
+        semiring: Semiring | str = MIN_PLUS,
+        block_size: int | None = None,
+        bk: int = 32,
+        batch_block: int | None = None,
+        variant: str = "fori",
+        validate: bool = True,
+        interpret: bool | None = None,
+        vmem_budget: int = 128 << 20,
+    ):
+        if method not in METHODS:
+            raise ValueError(f"unknown method {method!r}; have {METHODS}")
+        if method == "distributed":
+            raise ValueError(
+                "ApspEngine does not drive the distributed backend; use "
+                "apsp.solve(method='distributed') directly"
+            )
+        self.method = method
+        self.semiring = _resolve_semiring(semiring)
+        self.block_size = block_size
+        self.bk = bk
+        self.batch_block = batch_block
+        self.variant = variant
+        self.validate = validate
+        self.interpret = interpret
+        self.vmem_budget = vmem_budget
+        self.stats = EngineStats()
+        self._cache: dict[PlanKey, ExecutablePlan] = {}
+
+    # ------------------------------------------------------------- planning
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+    @property
+    def cache_size(self) -> int:
+        return len(self._cache)
+
+    def _resolve_shape(self, n: int, successors: bool) -> tuple[str, int | None, int]:
+        """(method, block_size, n_padded) for an n-vertex graph — delegates
+        to api._resolve_shape, the ONE dispatch-and-padding policy, so the
+        bucket key, the plan key, and stateless ``solve`` can never drift."""
+        return _resolve_shape(self.method, n, successors, self.block_size)
+
+    def plan_for(
+        self,
+        n: int,
+        batch: int = 1,
+        *,
+        dtype=jnp.float32,
+        successors: bool = False,
+    ) -> ExecutablePlan:
+        """Resolve (and cache) the executable plan for an (n, batch) solve."""
+        meth, s, m = self._resolve_shape(n, successors)
+        if successors:
+            _check_successor_args(meth, self.semiring)
+        if meth == "numpy" and self.semiring is not MIN_PLUS:
+            raise ValueError("method='numpy' implements min_plus only")
+        bb = None
+        bk = self.bk
+        if s is not None:
+            bk = min(bk, s)
+            if meth in ("staged", "fused"):
+                bb = self.batch_block or plan.auto_batch_block(
+                    batch, m, s, bk=bk, variant=self.variant,
+                    word=jnp.dtype(dtype).itemsize,
+                    vmem_budget=self.vmem_budget, successors=successors,
+                )
+        key = PlanKey(
+            n_padded=m, batch=batch, dtype=str(jnp.dtype(dtype)),
+            semiring=self.semiring.name, method=meth, block_size=s, bk=bk,
+            batch_block=bb, successors=successors,
+        )
+        entry = self._cache.get(key)
+        if entry is not None:
+            self.stats.hits += 1
+            return entry
+        self.stats.misses += 1
+        entry = self._build(key)
+        self._cache[key] = entry
+        return entry
+
+    def _build(self, key: PlanKey) -> ExecutablePlan:
+        """Construct the jitted batched runner for a cache key."""
+        sr = self.semiring
+        s, bk, bb = key.block_size, key.bk, key.batch_block
+        interpret = self.interpret
+
+        if key.method == "numpy":
+            def runner(wp):
+                return np.stack([fw_numpy(g) for g in np.asarray(wp)])
+
+            return ExecutablePlan(key=key, runner=runner)
+
+        if key.method == "naive":
+            if key.successors:
+                fn = jax.vmap(fw_with_successors)
+            else:
+                fn = jax.vmap(lambda x: fw_naive(x, semiring=sr))
+        elif key.method == "blocked":
+            if key.successors:
+                fn = jax.vmap(
+                    lambda x: fw_blocked_with_successors(x, block_size=s)
+                )
+            else:
+                fn = jax.vmap(
+                    lambda x: fw_blocked(x, block_size=s, semiring=sr)
+                )
+        else:  # staged / fused — the kernels' native batch grid
+            # Same lowering policy as api.solve: no TPU and no explicit
+            # interpret request → the fused round's bitwise XLA lowering.
+            from repro.kernels.ops import default_interpret
+
+            use_ref = interpret is None and default_interpret()
+            if key.successors:
+                fn = lambda x: fw_staged_with_successors(
+                    x, block_size=s, batch_block=bb, interpret=interpret,
+                    lowering="ref" if use_ref else "pallas",
+                )
+            else:
+                fn = lambda x: fw_staged(
+                    x, block_size=s, bk=bk, batch_block=bb,
+                    variant=self.variant, semiring=sr, interpret=interpret,
+                    fused="ref" if use_ref
+                    else (True if key.method == "fused" else None),
+                )
+
+        entry = ExecutablePlan(key=key, runner=None)
+        if key.method in ("staged", "fused"):
+            scale = 2 if key.successors else 1
+            word = jnp.dtype(key.dtype).itemsize
+            entry.vmem_bytes = scale * plan.fused_round_vmem_bytes(
+                key.n_padded, s, bk, word=word, variant=self.variant,
+                batch=bb or 1,
+            )
+            entry.hbm_bytes_per_round = scale * plan.fused_round_hbm_bytes(
+                key.n_padded, s, word=word, batch=key.batch,
+            )
+
+        def traced(wp):
+            # Runs only while JAX traces (i.e. on compile) — the cache-hit
+            # tests assert this counter stays put on repeated keys.
+            entry.traces += 1
+            return fn(wp)
+
+        entry.runner = jax.jit(traced)
+        return entry
+
+    # -------------------------------------------------------------- solving
+    def solve(self, w, *, successors: bool = False) -> APSPResult:
+        """One graph or one uniform (B, n, n) batch through the cache."""
+        arr = _coerce(w, self.semiring)
+        batched = arr.ndim == 3
+        n = arr.shape[-1]
+        B = arr.shape[0] if batched else 1
+        entry = self.plan_for(
+            n, B, dtype=arr.dtype, successors=successors
+        )
+        wb = jnp.asarray(arr)
+        if not batched:
+            wb = wb[None]
+        dist, succ = self._run(entry, wb, n)
+        if not batched:
+            dist = dist[0]
+            succ = succ[0] if succ is not None else None
+        if self.validate and self.semiring is MIN_PLUS:
+            _check_negative_cycles(dist, batched)
+        self.stats.solves += 1
+        self.stats.graphs_solved += B
+        return self._result(entry, dist, succ, n)
+
+    def solve_many(
+        self, graphs: Sequence, *, successors: bool = False
+    ) -> list[APSPResult]:
+        """Ragged batch: bucket by padded shape, solve each bucket batched.
+
+        graphs: sequence of (n_i, n_i) matrices (sizes may differ) or one
+        (B, n, n) array.  Returns per-graph results in input order, bitwise
+        equal to per-graph ``solve`` calls — bucketing never changes the
+        per-element computation, only how many dispatches carry it.
+        """
+        if hasattr(graphs, "ndim") and getattr(graphs, "ndim", 0) == 3:
+            graphs = list(graphs)
+        arrs = [_coerce(g, self.semiring) for g in graphs]
+        for a in arrs:
+            if a.ndim != 2:
+                raise ValueError(
+                    f"solve_many expects (n,n) graphs, got {a.shape}"
+                )
+        # ----- bucket by the shape the executable actually sees ----------
+        buckets: dict[tuple, list[int]] = {}
+        metas = []
+        for idx, a in enumerate(arrs):
+            n = a.shape[-1]
+            meth, s, m = self._resolve_shape(n, successors)
+            bkey = (meth, m, s, str(jnp.dtype(a.dtype)))
+            buckets.setdefault(bkey, []).append(idx)
+            metas.append((n, meth, s, m))
+        # ----- one batched solve per bucket ------------------------------
+        results: list[APSPResult | None] = [None] * len(arrs)
+        for (meth, m, s, _dt), idxs in buckets.items():
+            entry = self.plan_for(
+                arrs[idxs[0]].shape[-1], len(idxs),
+                dtype=arrs[idxs[0]].dtype, successors=successors,
+            )
+            wb = jnp.stack(
+                [_pad(jnp.asarray(arrs[i]), m, self.semiring) for i in idxs]
+            )
+            dist, succ = self._run(entry, wb, m)
+            if self.validate and self.semiring is MIN_PLUS:
+                bad = np.asarray(negative_cycle_mask_padded(dist, [
+                    metas[i][0] for i in idxs
+                ]))
+                if bad.any():
+                    which = [idxs[k] for k in np.flatnonzero(bad)]
+                    raise NegativeCycleError(
+                        f"negative cycle detected in graphs {which}"
+                    )
+            for k, i in enumerate(idxs):
+                n_i = metas[i][0]
+                d_i = dist[k, :n_i, :n_i]
+                s_i = succ[k, :n_i, :n_i] if succ is not None else None
+                results[i] = self._result(entry, d_i, s_i, n_i)
+        self.stats.solves += len(buckets)
+        self.stats.graphs_solved += len(arrs)
+        return results  # type: ignore[return-value]
+
+    # -------------------------------------------------------------- helpers
+    def _run(self, entry: ExecutablePlan, wb, n: int):
+        """Pad to the plan shape, run the cached executable, unpad."""
+        m = entry.key.n_padded
+        wp = _pad(wb, m, self.semiring)
+        out = entry.runner(wp)
+        if entry.key.successors:
+            dist, succ = out
+            return dist[..., :n, :n], succ[..., :n, :n]
+        return out[..., :n, :n], None
+
+    def _result(self, entry: ExecutablePlan, dist, succ, n: int) -> APSPResult:
+        return APSPResult(
+            dist=dist, succ=succ, method=entry.key.method,
+            semiring=entry.key.semiring, block_size=entry.key.block_size,
+            n=n, padded_n=entry.key.n_padded,
+        )
+
+
+def negative_cycle_mask_padded(dist, ns: Sequence[int]) -> np.ndarray:
+    """Per-graph negative-cycle mask honoring each graph's true size.
+
+    dist: (B, m, m) padded closures; ns: true vertex counts.  Padding
+    vertices have a 0 (⊗-identity) diagonal, so restricting the check to
+    the real diagonal is equivalent but keeps intent explicit.
+    """
+    d = np.asarray(jnp.diagonal(jnp.asarray(dist), axis1=-2, axis2=-1))
+    return np.stack([bool((d[k, : ns[k]] < 0).any()) for k in range(len(ns))])

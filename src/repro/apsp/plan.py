@@ -76,42 +76,82 @@ def phase3_vmem_bytes(
 
 
 def fused_round_vmem_bytes(
-    n: int, s: int, bk: int, *, word: int = 4, variant: str = "fori"
+    n: int, s: int, bk: int, *, word: int = 4, variant: str = "fori",
+    batch: int = 1,
 ) -> int:
     """VMEM per fused-round grid step (``kernels.fw_round``).
 
     Persistent scratch holds both closed pivot bands (2·s·n words); the
     (s,s) input and output tiles are each double-buffered by the Pallas
     pipeline.  The "broadcast" phase-3 variant additionally materializes an
-    (s, bk, s) product transient.  See EXPERIMENTS.md §Fused round.
+    (s, bk, s) product transient.  ``batch`` is the batch *block* of the
+    batched grid: every term carries a per-graph leading dim, so the
+    footprint scales linearly.  See EXPERIMENTS.md §Fused round.
     """
     bands = 2 * s * n
     tiles = 2 * 2 * s * s
     transient = s * bk * s if variant == "broadcast" else 0
-    return (bands + tiles + transient) * word
+    return batch * (bands + tiles + transient) * word
 
 
-def fused_round_hbm_bytes(n: int, s: int, *, word: int = 4) -> float:
+def fused_round_hbm_bytes(
+    n: int, s: int, *, word: int = 4, batch: int = 1
+) -> float:
     """HBM traffic for ONE fused round: every tile read+written exactly once
-    at its grid step — T² + 2T - 1 steps of an (s,s) block each.
+    at its grid step — T² + 2T - 1 steps of an (s,s) block each, ×batch
+    graphs.
 
     Compare ``staged_hbm_bytes_per_round``: the multi-kernel round re-reads
     the pivot bands for phase 3 and round-trips the phase-2 splices through
     HBM; the fused round keeps all of that in scratch.
     """
     T = padded_size(n, s) // s
-    return 2.0 * (T * T + 2 * T - 1) * s * s * word
+    return 2.0 * batch * (T * T + 2 * T - 1) * s * s * word
 
 
-def fused_round_steps(n: int, s: int) -> int:
-    """Grid steps of one fused round: T² phase-3 + 2(T-1) bands + 1 pivot."""
+def fused_round_steps(n: int, s: int, *, batch: int = 1) -> int:
+    """Grid steps of one fused round: T² phase-3 + 2(T-1) bands + 1 pivot,
+    times the batch-grid leading dimension (graphs / batch block)."""
     T = padded_size(n, s) // s
-    return T * T + 2 * T - 1
+    return batch * (T * T + 2 * T - 1)
+
+
+def auto_batch_block(
+    B: int,
+    n: int,
+    s: int,
+    *,
+    bk: int = 32,
+    word: int = 4,
+    variant: str = "fori",
+    vmem_budget: int = 128 << 20,
+    successors: bool = False,
+) -> int:
+    """Largest divisor of B whose per-step scratch+tile footprint fits VMEM.
+
+    The batched round's working set scales linearly in the batch block
+    (per-graph scratch bands), so the best block is simply the fattest one
+    the budget admits — bigger blocks mean fewer grid steps and wider
+    VPU-lane occupancy per step.  ``successors=True`` doubles the footprint
+    (distance + successor bands).
+    """
+    if B < 1:
+        raise ValueError(f"batch size must be >= 1, got {B}")
+    scale = 2 if successors else 1
+    for bb in range(B, 0, -1):
+        if B % bb:
+            continue
+        if scale * fused_round_vmem_bytes(
+            n, s, bk, word=word, variant=variant, batch=bb
+        ) <= vmem_budget:
+            return bb
+    return 1
 
 
 def fw_candidates(
     n: int,
     *,
+    batch: int = 1,
     vmem_budget: int = 128 << 20,
     word: int = 4,
     variant: str = "fori",
@@ -124,7 +164,10 @@ def fw_candidates(
     bn = block_size by construction) and ``impl="staged"`` (4 dispatches;
     bm/bn from the phase-3 tile grid).  A candidate survives iff its
     per-step VMEM footprint fits ``vmem_budget`` (default: a 128 MB v5e
-    core).  Deterministic — the benchmark key manifest is derived from it.
+    core).  ``batch > 1`` models the batched grid: fused candidates gain a
+    ``batch_block`` (the fattest divisor of ``batch`` the budget admits)
+    and per-round HBM/step counts scale to the whole batch.  Deterministic
+    — the benchmark key manifest is derived from it.
     """
     out = []
     for s in block_sizes:
@@ -138,15 +181,23 @@ def fw_candidates(
             if bk > sp:
                 continue
             rounds = m // sp
-            v = fused_round_vmem_bytes(m, sp, bk, word=word, variant=variant)
+            bb = auto_batch_block(
+                batch, m, sp, bk=bk, word=word, variant=variant,
+                vmem_budget=vmem_budget,
+            ) if batch > 1 else 1
+            v = fused_round_vmem_bytes(
+                m, sp, bk, word=word, variant=variant, batch=bb
+            )
             if v <= vmem_budget:
-                per_round = fused_round_hbm_bytes(m, sp, word=word)
+                per_round = fused_round_hbm_bytes(m, sp, word=word, batch=batch)
                 out.append(dict(
                     impl="fused", block_size=sp, bm=sp, bn=sp, bk=bk,
+                    batch=batch, batch_block=bb,
                     vmem_bytes=v,
                     hbm_bytes_per_round=per_round,
                     hbm_bytes_total=rounds * per_round,
-                    steps_per_round=fused_round_steps(m, sp),
+                    steps_per_round=fused_round_steps(m, sp,
+                                                      batch=batch // bb),
                     dispatches_per_round=1,
                 ))
             for bm in (sp, 2 * sp):
@@ -154,15 +205,16 @@ def fw_candidates(
                     continue
                 v3 = phase3_vmem_bytes(bm, bm, bk, word=word, fused=True)
                 if v3 <= vmem_budget:
-                    per_round = staged_hbm_bytes_per_round(
+                    per_round = batch * staged_hbm_bytes_per_round(
                         m, m, sp, bm=bm, bn=bm, word=word
                     )
                     out.append(dict(
                         impl="staged", block_size=sp, bm=bm, bn=bm, bk=bk,
+                        batch=batch, batch_block=1,
                         vmem_bytes=v3,
                         hbm_bytes_per_round=per_round,
                         hbm_bytes_total=rounds * per_round,
-                        steps_per_round=(m // bm) ** 2 * (sp // bk),
+                        steps_per_round=batch * (m // bm) ** 2 * (sp // bk),
                         dispatches_per_round=4,
                     ))
     return out
@@ -172,6 +224,7 @@ def autotune_fw(
     n: int,
     measure=None,
     *,
+    batch: int = 1,
     vmem_budget: int = 128 << 20,
     variant: str = "fori",
     top: int | None = None,
@@ -185,8 +238,11 @@ def autotune_fw(
     would favor tiny pivots that pay for themselves in round count (the
     kernels are bandwidth-bound on the VPU roofline — EXPERIMENTS.md
     §Roofline) — with fused-before-staged dispatch count as tiebreak.
+    ``batch=B`` ranks configs for a B-graph batched solve instead (same
+    model, scaled; fused candidates carry the chosen ``batch_block``).
     """
-    cands = fw_candidates(n, vmem_budget=vmem_budget, variant=variant)
+    cands = fw_candidates(n, batch=batch, vmem_budget=vmem_budget,
+                          variant=variant)
     if not cands:
         raise ValueError(
             f"no viable round config for n={n} within vmem_budget="

@@ -1,240 +1,25 @@
-"""Unified APSP front-end: ``solve`` owns padding, dispatch, and batching.
+"""Back-compat shim: the solver front-end moved to ``repro.apsp.api``.
 
-Every caller used to hand-roll the same steps: pad n to a tile multiple,
-pick a method and block size, run, unpad, verify.  ``solve`` owns all of it:
-
-  * **pad/unpad** — arbitrary n; padding vertices are ⊕-identity rows/cols
-    with ⊗-identity diagonal, so they are unreachable under any semiring and
-    the top-left n×n of the padded closure equals the closure of the input.
-  * **dispatch** — ``method="auto"`` picks a sensible rung of the paper's
-    implementation ladder for the input size and backend; explicit names
-    ("numpy" | "naive" | "blocked" | "staged" | "fused" | "distributed")
-    pin one ("fused" = staged with the single-dispatch fused round kernel).
-  * **batching** — a (B, n, n) input runs all B graphs in one ``vmap``-ed
-    computation (the serve-many-small-routing-graphs scenario); results
-    match per-graph solves bit-for-bit.
-  * **successors** — ``successors=True`` tracks next-hop matrices through
-    the blocked path (``core.paths.fw_blocked_with_successors``) instead of
-    the O(n³)-sweep naive loop.
-  * **validation** — min-plus solves raise ``NegativeCycleError`` when the
-    result certifies a negative cycle (a strictly negative diagonal entry).
+The package split the old monolithic solver into a thin stateless front-end
+(``api.solve``) and the stateful batched execution engine
+(``engine.ApspEngine``).  Import from ``repro.apsp`` (preferred) or
+``repro.apsp.api``; this module keeps old ``repro.apsp.solver`` imports
+working.
 """
-from __future__ import annotations
+from repro.apsp.api import (  # noqa: F401
+    APSPResult,
+    METHODS,
+    SUCCESSOR_METHODS,
+    NegativeCycleError,
+    negative_cycle_mask,
+    solve,
+)
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.apsp import plan
-from repro.core.floyd_warshall import fw_blocked, fw_naive, fw_numpy
-from repro.core.paths import fw_blocked_with_successors, fw_with_successors
-from repro.core.semiring import MIN_PLUS, SEMIRINGS, Semiring
-from repro.core.staged import fw_staged
-
-METHODS = ("auto", "numpy", "naive", "blocked", "staged", "fused", "distributed")
-
-# Below this size a padded tile pass does more work than the n sweeps of the
-# naive kernel; "auto" stays on the naive rung.
-_NAIVE_CUTOFF = 64
-
-
-class NegativeCycleError(ValueError):
-    """The distance matrix certifies a negative cycle (diag < 0)."""
-
-
-@dataclasses.dataclass(frozen=True)
-class APSPResult:
-    """Outcome of ``solve``: distances plus how they were computed.
-
-    dist: (n, n) or (B, n, n) closure, unpadded.
-    succ: next-hop matrix of the same shape (None unless successors=True);
-          succ[i, j] = -1 where no i→j path exists.
-    """
-
-    dist: jax.Array | np.ndarray
-    succ: jax.Array | np.ndarray | None
-    method: str
-    semiring: str
-    block_size: int | None
-    n: int
-    padded_n: int
-
-    @property
-    def batched(self) -> bool:
-        return np.ndim(self.dist) == 3
-
-
-def negative_cycle_mask(dist) -> jax.Array:
-    """Per-graph bool: does the (…, n, n) closure certify a negative cycle?"""
-    diag = jnp.diagonal(jnp.asarray(dist), axis1=-2, axis2=-1)
-    return jnp.any(diag < 0, axis=-1)
-
-
-def _resolve_semiring(semiring: Semiring | str) -> Semiring:
-    if isinstance(semiring, str):
-        try:
-            return SEMIRINGS[semiring]
-        except KeyError:
-            raise ValueError(
-                f"unknown semiring {semiring!r}; have {sorted(SEMIRINGS)}"
-            ) from None
-    return semiring
-
-
-def _resolve_method(method: str, n: int, successors: bool) -> str:
-    if method not in METHODS:
-        raise ValueError(f"unknown method {method!r}; have {METHODS}")
-    if method != "auto":
-        return method
-    if successors:
-        return "blocked" if n > _NAIVE_CUTOFF else "naive"
-    if n <= _NAIVE_CUTOFF:
-        return "naive"
-    # The Pallas kernels run natively on TPU; on CPU they interpret (slow),
-    # so auto prefers the jnp blocked path there.
-    return "staged" if jax.default_backend() == "tpu" else "blocked"
-
-
-def _pad(w: jax.Array, m: int, semiring: Semiring) -> jax.Array:
-    """Pad (…, n, n) to (…, m, m) with ⊕-identity edges, ⊗-identity diag."""
-    n = w.shape[-1]
-    if m == n:
-        return w
-    widths = [(0, 0)] * (w.ndim - 2) + [(0, m - n), (0, m - n)]
-    out = jnp.pad(w, widths, constant_values=semiring.zero)
-    idx = jnp.arange(n, m)
-    return out.at[..., idx, idx].set(jnp.asarray(semiring.one, out.dtype))
-
-
-def solve(
-    w,
-    *,
-    method: str = "auto",
-    semiring: Semiring | str = MIN_PLUS,
-    successors: bool = False,
-    block_size: int | None = None,
-    validate: bool = True,
-    mesh=None,
-    row_axes="data",
-    col_axes="model",
-    variant: str = "fori",
-    interpret: bool | None = None,
-) -> APSPResult:
-    """All-pairs shortest paths (semiring closure) of one or many graphs.
-
-    w: (n, n) adjacency matrix, or (B, n, n) for a batch of graphs; missing
-       edges are the semiring ⊕-identity (+inf for min-plus).  Any n — the
-       solver pads to the tile multiple and unpads the result.  Integer
-       matrices are promoted to float32 when the semiring identities are
-       non-finite (min-plus & friends) — ints cannot encode +inf.
-    method: "auto" | "numpy" | "naive" | "blocked" | "staged" | "fused" |
-       "distributed" ("fused" pins the one-pallas_call-per-round kernel;
-       "staged" defaults to it too and falls back per fw_staged).
-    successors: also return next-hop matrices (min-plus only; blocked or
-       naive methods).
-    block_size: pivot-tile size for blocked/staged/distributed (None = auto).
-    validate: raise ``NegativeCycleError`` on a negative diagonal (min-plus
-       only; forces a host sync).
-    mesh/row_axes/col_axes: device mesh for method="distributed".
-    variant/interpret: staged-kernel lowering knobs (passed through).
-    """
-    sr = _resolve_semiring(semiring)
-    arr = np.asarray(w) if isinstance(w, (np.ndarray, list, tuple)) else w
-    if arr.ndim not in (2, 3) or arr.shape[-1] != arr.shape[-2]:
-        raise ValueError(f"w must be (n,n) or (B,n,n), got {arr.shape}")
-    if not jnp.issubdtype(arr.dtype, jnp.floating) and not (
-        np.isfinite(sr.zero) and np.isfinite(sr.one)
-    ):
-        # Integer matrices cannot represent the ±inf identities: padding /
-        # missing edges would wrap on ⊗ (INT_MAX + w < 0) and silently
-        # shorten paths.  Promote once, up front.
-        arr = arr.astype(np.float32)
-    batched = arr.ndim == 3
-    n = arr.shape[-1]
-    meth = _resolve_method(method, n, successors)
-
-    if successors:
-        if sr is not MIN_PLUS:
-            raise ValueError("successors=True requires the min_plus semiring")
-        if meth not in ("blocked", "naive"):
-            raise ValueError(
-                f"successors=True supports methods 'blocked'/'naive', not {meth!r}"
-            )
-    if meth == "distributed":
-        if batched:
-            raise ValueError("method='distributed' does not support batched input")
-        if mesh is None:
-            raise ValueError("method='distributed' requires a mesh")
-    if meth == "numpy" and sr is not MIN_PLUS:
-        raise ValueError("method='numpy' implements min_plus only")
-
-    # --- resolve padding ------------------------------------------------
-    s: int | None = None
-    m = n
-    if meth in ("blocked", "staged", "fused"):
-        s = block_size or plan.auto_block_size(n)
-        m = plan.padded_size(n, s)
-    elif meth == "distributed":
-        from repro.core.distributed import _axis_size
-
-        s = block_size or plan.auto_block_size(n)
-        mult = plan.distributed_multiple(
-            s, _axis_size(mesh, row_axes), _axis_size(mesh, col_axes)
-        )
-        m = plan.padded_size(n, mult)
-
-    # --- run ------------------------------------------------------------
-    succ = None
-    if meth == "numpy":
-        dist = (
-            np.stack([fw_numpy(g) for g in arr]) if batched else fw_numpy(arr)
-        )
-    elif meth == "naive":
-        wj = jnp.asarray(arr)
-        if successors:
-            run = fw_with_successors
-            dist, succ = jax.vmap(run)(wj) if batched else run(wj)
-        else:
-            run = lambda x: fw_naive(x, semiring=sr)
-            dist = jax.vmap(run)(wj) if batched else run(wj)
-    else:
-        wp = _pad(jnp.asarray(arr), m, sr)
-        if meth == "blocked":
-            if successors:
-                run = lambda x: fw_blocked_with_successors(x, block_size=s)
-                out = jax.vmap(run)(wp) if batched else run(wp)
-                dist, succ = out
-                succ = succ[..., :n, :n]
-            else:
-                run = lambda x: fw_blocked(x, block_size=s, semiring=sr)
-                dist = jax.vmap(run)(wp) if batched else run(wp)
-        elif meth in ("staged", "fused"):
-            # "staged" leaves the round lowering to fw_staged (fused by
-            # default); "fused" pins the single-dispatch round kernel.
-            run = lambda x: fw_staged(
-                x, block_size=s, semiring=sr, variant=variant,
-                interpret=interpret, fused=True if meth == "fused" else None,
-            )
-            dist = jax.vmap(run)(wp) if batched else run(wp)
-        else:  # distributed
-            from repro.core.distributed import fw_distributed
-
-            out = fw_distributed(
-                wp, mesh, block_size=s, row_axes=row_axes, col_axes=col_axes,
-                semiring=sr,
-            )
-            dist = jnp.asarray(jax.device_get(out))
-        dist = dist[..., :n, :n]
-
-    if validate and sr is MIN_PLUS:
-        bad = np.asarray(negative_cycle_mask(dist))
-        if bad.any():
-            which = f"graphs {np.flatnonzero(bad).tolist()}" if batched else "graph"
-            raise NegativeCycleError(f"negative cycle detected in {which}")
-
-    return APSPResult(
-        dist=dist, succ=succ, method=meth, semiring=sr.name,
-        block_size=s, n=n, padded_n=m,
-    )
+__all__ = [
+    "APSPResult",
+    "METHODS",
+    "SUCCESSOR_METHODS",
+    "NegativeCycleError",
+    "negative_cycle_mask",
+    "solve",
+]

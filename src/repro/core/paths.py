@@ -32,11 +32,17 @@ import numpy as np
 
 
 def _init_successors(w: jax.Array) -> jax.Array:
-    """succ[i,j] = j where an edge exists, i on the diagonal, else -1."""
-    n = w.shape[0]
-    has_edge = jnp.isfinite(w) & ~jnp.eye(n, dtype=bool)
-    succ = jnp.where(has_edge, jnp.broadcast_to(jnp.arange(n)[None, :], (n, n)), -1)
-    return jnp.where(jnp.eye(n, dtype=bool), jnp.arange(n)[:, None], succ)
+    """succ[...,i,j] = j where an edge exists, i on the diagonal, else -1.
+
+    Batch-rank-agnostic: (n,n) and (B,n,n) inputs get elementwise-identical
+    initialization (broadcast over the leading dims).
+    """
+    n = w.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    has_edge = jnp.isfinite(w) & ~eye
+    succ = jnp.where(has_edge, jnp.broadcast_to(idx[None, :], w.shape), -1)
+    return jnp.where(eye, idx[:, None], succ)
 
 
 @jax.jit

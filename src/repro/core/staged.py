@@ -23,12 +23,22 @@ The round itself has two lowerings:
   * ``fused=False`` — the original 4-dispatch sequence (phase 1, 2×phase 2,
     phase 3) with the bands spliced via ``dynamic_update_slice``.
 
+Both lowerings are **natively batched**: a (B, n, n) input runs every round
+of all B graphs through the kernels' leading batch grid dimension — one
+dispatch per round for the whole batch, NOT a ``vmap`` that replays the
+round loop per graph.  Per-element chains are unchanged, so batched outputs
+are bitwise equal to B separate solves.
+
 The round loop is a ``jax.lax.fori_loop`` over rounds: the body is traced
 once with a traced block offset, so the jaxpr holds a *constant* number of
 pallas_calls regardless of n — compile time is O(1) in the round count.
 ``unroll_rounds=True`` restores the seed's trace-time python loop (and, by
 default, the seed's 4-kernel round).  All four lowerings are bit-identical
 (tests/test_apsp_solve.py, tests/test_fw_round.py).
+
+``fw_staged_with_successors`` drives the fused successor-tracking round
+(``kernels.fw_round_with_successors``): the same schedule carrying a
+next-hop matrix, bit-matching ``core.paths.fw_blocked_with_successors``.
 """
 from __future__ import annotations
 
@@ -40,15 +50,16 @@ import jax.numpy as jnp
 from repro.core.semiring import MIN_PLUS, Semiring
 from repro.kernels.fw_phase1 import fw_phase1
 from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
-from repro.kernels.fw_round import fw_round
+from repro.kernels.fw_round import fw_round, fw_round_with_successors
 from repro.kernels.minplus_matmul import _fit_block, semiring_matmul
+from repro.kernels.ref import _dyn_slice, _dyn_update
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block_size", "bm", "bn", "bk", "variant", "semiring", "interpret",
-        "unroll_rounds", "fused",
+        "block_size", "bm", "bn", "bk", "batch_block", "variant", "semiring",
+        "interpret", "unroll_rounds", "fused",
     ),
 )
 def fw_staged(
@@ -58,6 +69,7 @@ def fw_staged(
     bm: int = 256,
     bn: int = 256,
     bk: int = 32,
+    batch_block: int | None = None,
     variant: str = "fori",
     semiring: Semiring = MIN_PLUS,
     interpret: bool | None = None,
@@ -66,15 +78,22 @@ def fw_staged(
 ) -> jax.Array:
     """Staged blocked FW (the paper's 'Staged Load' implementation).
 
-    w: (n,n), n % block_size == 0 (``repro.apsp.solve`` pads arbitrary n).
+    w: (n,n) or (B,n,n), n % block_size == 0 (``repro.apsp.solve`` pads
+      arbitrary n).  Batched input closes all B graphs with one kernel
+      dispatch per round (leading batch grid dimension).
     bm/bn/bk: phase-3 output-tile and staging-depth parameters (the fused
       round works on (s,s) tiles, so bm/bn only affect ``fused=False``).
+    batch_block: graphs per grid step of the batched fused round (None →
+      the fattest divisor of B that fits the VMEM budget).
     unroll_rounds: trace-time python round loop instead of fori_loop
       (O(n/s) trace size; only useful for trace inspection and tests).
     fused: one pallas_call per round (kernels.fw_round) vs the 4-dispatch
       multi-kernel round.  None → fused, except under ``unroll_rounds``
-      which preserves the seed lowering exactly.  Outputs are bit-identical
-      either way.
+      which preserves the seed lowering exactly.  ``"ref"`` runs the fused
+      round's execution-grade XLA lowering (``kernels.ref.fw_round_ref``) —
+      what ``solve`` picks on CPU, where the Pallas interpreter's grid
+      emulation would dominate wall-clock.  Outputs are bit-identical
+      across all of them.
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
@@ -82,8 +101,10 @@ def fw_staged(
         interpret = default_interpret()
     if fused is None:
         fused = not unroll_rounds
-    n = w.shape[0]
+    n = w.shape[-1]
     s = block_size
+    if w.ndim not in (2, 3) or w.shape[-2] != n:
+        raise ValueError(f"w must be (n,n) or (B,n,n), got {w.shape}")
     if n % s:
         raise ValueError(f"n={n} not a multiple of block_size={s}")
     # Phase-3 staging depth cannot exceed the pivot width.
@@ -93,11 +114,20 @@ def fw_staged(
     bt_eff = _fit_block(n, 512)
 
     if fused:
-        def round_body(b, w):
-            return fw_round(
-                w, b, block_size=s, bk=bk_eff, variant=variant,
-                semiring=semiring, interpret=interpret,
-            )
+        if fused == "ref":
+            from repro.kernels.ref import fw_round_ref
+
+            def round_body(b, w):
+                return fw_round_ref(
+                    w, b, block_size=s, bk=bk_eff, variant=variant,
+                    semiring=semiring,
+                )
+        else:
+            def round_body(b, w):
+                return fw_round(
+                    w, b, block_size=s, bk=bk_eff, batch_block=batch_block,
+                    variant=variant, semiring=semiring, interpret=interpret,
+                )
 
         if unroll_rounds:
             for b in range(n // s):
@@ -108,24 +138,23 @@ def fw_staged(
     def round_body(b, w):
         o = b * s
         diag = fw_phase1(
-            jax.lax.dynamic_slice(w, (o, o), (s, s)), semiring=semiring,
-            interpret=interpret,
+            _dyn_slice(w, o, o, s, s), semiring=semiring, interpret=interpret,
         )
         row_band = fw_phase2_row(
-            diag, jax.lax.dynamic_slice(w, (o, 0), (s, n)), bt=bt_eff,
+            diag, _dyn_slice(w, o, 0, s, n), bt=bt_eff,
             semiring=semiring, interpret=interpret,
         )
         # The diagonal tile inside the row band must be the closed one; the
         # row kernel recomputed that slice against itself which is a no-op
         # for idempotent ⊕, but we overwrite for exactness under any ⊕.
-        row_band = jax.lax.dynamic_update_slice(row_band, diag, (0, o))
+        row_band = _dyn_update(row_band, diag, 0, o)
         col_band = fw_phase2_col(
-            diag, jax.lax.dynamic_slice(w, (0, o), (n, s)), bt=bt_eff,
+            diag, _dyn_slice(w, 0, o, n, s), bt=bt_eff,
             semiring=semiring, interpret=interpret,
         )
-        col_band = jax.lax.dynamic_update_slice(col_band, diag, (o, 0))
-        w = jax.lax.dynamic_update_slice(w, row_band, (o, 0))
-        w = jax.lax.dynamic_update_slice(w, col_band, (0, o))
+        col_band = _dyn_update(col_band, diag, o, 0)
+        w = _dyn_update(w, row_band, o, 0)
+        w = _dyn_update(w, col_band, 0, o)
         return semiring_matmul(
             col_band, row_band, w, semiring=semiring, bm=bm_eff, bn=bn_eff,
             bk=bk_eff, variant=variant, interpret=interpret,
@@ -136,3 +165,60 @@ def fw_staged(
             w = round_body(b, w)
         return w
     return jax.lax.fori_loop(0, n // s, round_body, w)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "batch_block", "interpret",
+                     "unroll_rounds", "lowering"),
+)
+def fw_staged_with_successors(
+    w: jax.Array,
+    *,
+    block_size: int = 128,
+    batch_block: int | None = None,
+    interpret: bool | None = None,
+    unroll_rounds: bool = False,
+    lowering: str = "pallas",
+) -> tuple[jax.Array, jax.Array]:
+    """Staged FW with native next-hop tracking through the fused round.
+
+    w: (n,n) or (B,n,n) min-plus distance matrix, n % block_size == 0.
+    Returns (dist, succ): succ[..., i, j] = next vertex after i on the
+    shortest i→j path, -1 where no path exists.  One ``pallas_call`` per
+    round for the whole batch (``lowering="ref"`` swaps in the bitwise
+    XLA lowering, for CPU execution); outputs bit-match
+    ``core.paths.fw_blocked_with_successors`` per graph.
+    """
+    from repro.core.paths import _init_successors
+
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    n = w.shape[-1]
+    s = block_size
+    if w.ndim not in (2, 3) or w.shape[-2] != n:
+        raise ValueError(f"w must be (n,n) or (B,n,n), got {w.shape}")
+    if n % s:
+        raise ValueError(f"n={n} not a multiple of block_size={s}")
+    succ = _init_successors(w)
+
+    if lowering == "ref":
+        from repro.kernels.ref import fw_round_with_successors_ref
+
+        def round_body(b, carry):
+            return fw_round_with_successors_ref(*carry, b, block_size=s)
+    else:
+        def round_body(b, carry):
+            return fw_round_with_successors(
+                *carry, b, block_size=s, batch_block=batch_block,
+                interpret=interpret,
+            )
+
+    if unroll_rounds:
+        carry = (w, succ)
+        for b in range(n // s):
+            carry = round_body(b, carry)
+        return carry
+    return jax.lax.fori_loop(0, n // s, round_body, (w, succ))

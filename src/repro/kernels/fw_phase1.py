@@ -19,11 +19,13 @@ from repro.core.semiring import MIN_PLUS, Semiring
 
 
 def _phase1_kernel(w_ref, o_ref, *, semiring: Semiring):
-    s = w_ref.shape[0]
+    s = w_ref.shape[-1]
     t = w_ref[...]
 
     def body(k, t):
-        return semiring.add(t, semiring.mul(t[:, k, None], t[k, None, :]))
+        # Ellipsis-relative indexing: the same chain with or without a
+        # leading batch dim ((B,s,s) tiles from the batched grid).
+        return semiring.add(t, semiring.mul(t[..., :, k, None], t[..., k, None, :]))
 
     o_ref[...] = jax.lax.fori_loop(0, s, body, t)
 
@@ -32,12 +34,27 @@ def _phase1_kernel(w_ref, o_ref, *, semiring: Semiring):
 def fw_phase1(
     tile: jax.Array, *, semiring: Semiring = MIN_PLUS, interpret: bool = False
 ) -> jax.Array:
-    """In-place FW closure of one diagonal tile (s,s)."""
-    s = tile.shape[0]
-    if tile.shape != (s, s):
-        raise ValueError(f"diagonal tile must be square, got {tile.shape}")
+    """In-place FW closure of one (s,s) diagonal tile, or (B,s,s) of them.
+
+    A batched input closes all B diagonal tiles in ONE dispatch with a
+    leading (parallel) batch grid dimension — one program per graph.
+    """
+    s = tile.shape[-1]
+    if tile.ndim not in (2, 3) or tile.shape[-2] != s:
+        raise ValueError(f"diagonal tile must be (s,s) or (B,s,s), got {tile.shape}")
+    kern = functools.partial(_phase1_kernel, semiring=semiring)
+    if tile.ndim == 2:
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((s, s), tile.dtype),
+            interpret=interpret,
+        )(tile)
+    B = tile.shape[0]
     return pl.pallas_call(
-        functools.partial(_phase1_kernel, semiring=semiring),
-        out_shape=jax.ShapeDtypeStruct((s, s), tile.dtype),
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, s, s), tile.dtype),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, s, s), lambda g: (g, 0, 0))],
+        out_specs=pl.BlockSpec((1, s, s), lambda g: (g, 0, 0)),
         interpret=interpret,
     )(tile)

@@ -22,21 +22,21 @@ from repro.kernels.minplus_matmul import _fit_block
 
 
 def _row_kernel(d_ref, p_ref, o_ref, *, semiring: Semiring):
-    s = d_ref.shape[0]
+    s = d_ref.shape[-1]
     d = d_ref[...]
 
     def body(k, p):
-        return semiring.add(p, semiring.mul(d[:, k, None], p[k, None, :]))
+        return semiring.add(p, semiring.mul(d[..., :, k, None], p[..., k, None, :]))
 
     o_ref[...] = jax.lax.fori_loop(0, s, body, p_ref[...])
 
 
 def _col_kernel(d_ref, p_ref, o_ref, *, semiring: Semiring):
-    s = d_ref.shape[0]
+    s = d_ref.shape[-1]
     d = d_ref[...]
 
     def body(k, p):
-        return semiring.add(p, semiring.mul(p[:, k, None], d[k, None, :]))
+        return semiring.add(p, semiring.mul(p[..., :, k, None], d[..., k, None, :]))
 
     o_ref[...] = jax.lax.fori_loop(0, s, body, p_ref[...])
 
@@ -50,21 +50,39 @@ def fw_phase2_row(
     semiring: Semiring = MIN_PLUS,
     interpret: bool = False,
 ) -> jax.Array:
-    """Update the row band (s, n): band ⊕= diag ⊗ band, k sequential."""
-    s, n = band.shape
+    """Update the row band (s, n): band ⊕= diag ⊗ band, k sequential.
+
+    Batched: diag (B,s,s) with band (B,s,n) closes all B bands in one
+    dispatch — the batch is a leading (parallel) grid dimension.
+    """
+    s, n = band.shape[-2:]
     # Largest divisor of n that is <= bt, so any band length works with the
     # default bt (e.g. n=640 → bt=320); the per-element k-chain is bt-
     # independent, so results are bitwise identical across choices.
     bt = _fit_block(n, bt)
+    kern = functools.partial(_row_kernel, semiring=semiring)
+    if band.ndim == 2:
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((s, n), band.dtype),
+            grid=(n // bt,),
+            in_specs=[
+                pl.BlockSpec((s, s), lambda j: (0, 0)),
+                pl.BlockSpec((s, bt), lambda j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((s, bt), lambda j: (0, j)),
+            interpret=interpret,
+        )(diag, band)
+    B = band.shape[0]
     return pl.pallas_call(
-        functools.partial(_row_kernel, semiring=semiring),
-        out_shape=jax.ShapeDtypeStruct((s, n), band.dtype),
-        grid=(n // bt,),
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, s, n), band.dtype),
+        grid=(B, n // bt),
         in_specs=[
-            pl.BlockSpec((s, s), lambda j: (0, 0)),
-            pl.BlockSpec((s, bt), lambda j: (0, j)),
+            pl.BlockSpec((1, s, s), lambda g, j: (g, 0, 0)),
+            pl.BlockSpec((1, s, bt), lambda g, j: (g, 0, j)),
         ],
-        out_specs=pl.BlockSpec((s, bt), lambda j: (0, j)),
+        out_specs=pl.BlockSpec((1, s, bt), lambda g, j: (g, 0, j)),
         interpret=interpret,
     )(diag, band)
 
@@ -78,17 +96,34 @@ def fw_phase2_col(
     semiring: Semiring = MIN_PLUS,
     interpret: bool = False,
 ) -> jax.Array:
-    """Update the column band (n, s): band ⊕= band ⊗ diag, k sequential."""
-    n, s = band.shape
+    """Update the column band (n, s): band ⊕= band ⊗ diag, k sequential.
+
+    Batched: diag (B,s,s) with band (B,n,s), one dispatch for all B bands.
+    """
+    n, s = band.shape[-2:]
     bt = _fit_block(n, bt)
+    kern = functools.partial(_col_kernel, semiring=semiring)
+    if band.ndim == 2:
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((n, s), band.dtype),
+            grid=(n // bt,),
+            in_specs=[
+                pl.BlockSpec((s, s), lambda i: (0, 0)),
+                pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            interpret=interpret,
+        )(diag, band)
+    B = band.shape[0]
     return pl.pallas_call(
-        functools.partial(_col_kernel, semiring=semiring),
-        out_shape=jax.ShapeDtypeStruct((n, s), band.dtype),
-        grid=(n // bt,),
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, n, s), band.dtype),
+        grid=(B, n // bt),
         in_specs=[
-            pl.BlockSpec((s, s), lambda i: (0, 0)),
-            pl.BlockSpec((bt, s), lambda i: (i, 0)),
+            pl.BlockSpec((1, s, s), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, bt, s), lambda g, i: (g, i, 0)),
         ],
-        out_specs=pl.BlockSpec((bt, s), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((1, bt, s), lambda g, i: (g, i, 0)),
         interpret=interpret,
     )(diag, band)

@@ -26,8 +26,15 @@ blocked APSP on KNL):
     step, exactly as the paper streams m-deep panel slices through shared
     memory.  Nothing closed in this round touches HBM until its final value
     is known; cross-step communication never leaves the chip.
+  * **native batch grid** — a (B, n, n) input adds a *leading* batch grid
+    dimension: B graphs share ONE dispatch per round, the scalar-prefetch
+    pivot schedule is broadcast across the batch (every graph runs the same
+    round-b tile order), and the scratch bands carry a per-graph leading
+    dim (``(bb, s, n)`` + ``(bb, n, s)`` for a batch block of bb graphs).
+    Each batch block finishes its whole round before the grid advances to
+    the next, so the band scratch is reused without cross-graph hazards.
 
-Sequencing: the grid's only dimension is "arbitrary" (sequential on the
+Sequencing: the grid dimensions are all "arbitrary" (sequential on the
 TensorCore), and *all* cross-step dataflow is through scratch — no step
 reads an HBM block written earlier in the same round, so Pallas' input
 prefetch (which may run ahead of the previous step's output DMA) can never
@@ -39,10 +46,22 @@ and phase 3 re-relaxes *every* tile (bands and diagonal included, with the
 closed values as accumulator input) through the same ``_stage_compute``
 bk-chunk sequence as ``semiring_matmul``'s k grid.  Outputs are therefore
 bitwise equal to ``fw_staged(unroll_rounds=True)`` for any semiring and
-dtype, not just up to tolerance (tests/test_fw_round.py).
+dtype, not just up to tolerance (tests/test_fw_round.py) — and the batched
+grid runs the identical elementwise chain per graph, so batched outputs are
+bitwise equal to B separate calls.
 
-VMEM: scratch is ``2·s·n`` words + the double-buffered (s,s) in/out tiles —
-``plan.fused_round_vmem_bytes``; n ≲ 48k fits a 128 MB v5e core at s=128.
+``fw_round_with_successors`` is the same multi-stage schedule carrying a
+next-hop matrix: every phase applies the strict-improvement relaxation of
+``core.paths`` (``cand < w`` rather than ⊕), with *four* scratch bands (the
+closed distance bands plus their successor bands), so
+``solve(successors=True, method="fused")`` no longer falls back to the
+multi-dispatch blocked path.  Outputs bit-match
+``fw_blocked_with_successors`` (distances and successor matrices).
+
+VMEM: scratch is ``bb·2·s·n`` words + the double-buffered (bb,s,s) in/out
+tiles — ``plan.fused_round_vmem_bytes(batch=bb)``; successor tracking
+doubles it.  ``plan.auto_batch_block`` picks the largest batch block that
+fits the budget.
 """
 from __future__ import annotations
 
@@ -63,6 +82,8 @@ def _round_order(b: jax.Array, T: int) -> tuple[jax.Array, jax.Array]:
     g=0 → pivot tile (b,b); g ∈ [1, T) → row-band tiles (b, j≠b);
     g ∈ [T, 2T-1) → col-band tiles (i≠b, b); g ≥ 2T-1 → phase 3 over all
     T² tiles in row-major order.  ``b`` is traced; the shapes are static.
+    The order is *per round*, not per graph — a batched call broadcasts the
+    same schedule to every graph in the batch.
     """
     b = jnp.asarray(b, jnp.int32)
     nz = jnp.arange(T - 1, dtype=jnp.int32)
@@ -80,64 +101,204 @@ def _round_order(b: jax.Array, T: int) -> tuple[jax.Array, jax.Array]:
 def _round_kernel(
     oi_ref, oj_ref, w_ref, o_ref, row_ref, col_ref,
     *, T: int, s: int, bk: int, semiring: Semiring, variant: Variant,
+    step_axis: int = 0,
 ):
-    g = pl.program_id(0)
+    g = pl.program_id(step_axis)
     i = oi_ref[g]
     j = oj_ref[g]
     b = oi_ref[0]  # the pivot index (step 0 visits the pivot tile)
+    # Batched refs carry a leading batch-block dim; `lead` makes every
+    # scratch index batch-rank-agnostic (compute uses ellipsis indexing).
+    lead = (slice(None),) if w_ref.ndim == 3 else ()
 
     @pl.when(g == 0)
     def _phase1():
         def body(k, t):
-            return semiring.add(t, semiring.mul(t[:, k, None], t[k, None, :]))
+            return semiring.add(
+                t, semiring.mul(t[..., :, k, None], t[..., k, None, :])
+            )
 
         t = jax.lax.fori_loop(0, s, body, w_ref[...])
         o_ref[...] = t
         # Seed both scratch bands with the closed diagonal: phase-3 steps can
         # then read A/B slices unconditionally at any tile index, pivot
         # included (the splice fw_staged did with dynamic_update_slice).
-        pl.store(row_ref, (slice(None), pl.dslice(j * s, s)), t)
-        pl.store(col_ref, (pl.dslice(i * s, s), slice(None)), t)
+        pl.store(row_ref, lead + (slice(None), pl.dslice(j * s, s)), t)
+        pl.store(col_ref, lead + (pl.dslice(i * s, s), slice(None)), t)
 
     @pl.when((g >= 1) & (g < T))
     def _phase2_row():
-        d = pl.load(row_ref, (slice(None), pl.dslice(b * s, s)))
+        d = pl.load(row_ref, lead + (slice(None), pl.dslice(b * s, s)))
 
         def body(k, p):
-            return semiring.add(p, semiring.mul(d[:, k, None], p[k, None, :]))
+            return semiring.add(
+                p, semiring.mul(d[..., :, k, None], p[..., k, None, :])
+            )
 
         p = jax.lax.fori_loop(0, s, body, w_ref[...])
         o_ref[...] = p
-        pl.store(row_ref, (slice(None), pl.dslice(j * s, s)), p)
+        pl.store(row_ref, lead + (slice(None), pl.dslice(j * s, s)), p)
 
     @pl.when((g >= T) & (g < 2 * T - 1))
     def _phase2_col():
-        d = pl.load(row_ref, (slice(None), pl.dslice(b * s, s)))
+        d = pl.load(row_ref, lead + (slice(None), pl.dslice(b * s, s)))
 
         def body(k, p):
-            return semiring.add(p, semiring.mul(p[:, k, None], d[k, None, :]))
+            return semiring.add(
+                p, semiring.mul(p[..., :, k, None], d[..., k, None, :])
+            )
 
         p = jax.lax.fori_loop(0, s, body, w_ref[...])
         o_ref[...] = p
-        pl.store(col_ref, (pl.dslice(i * s, s), slice(None)), p)
+        pl.store(col_ref, lead + (pl.dslice(i * s, s), slice(None)), p)
 
     @pl.when(g >= 2 * T - 1)
     def _phase3():
-        a = pl.load(col_ref, (pl.dslice(i * s, s), slice(None)))   # closed (i,b)
-        bb = pl.load(row_ref, (slice(None), pl.dslice(j * s, s)))  # closed (b,j)
+        a = pl.load(col_ref, lead + (pl.dslice(i * s, s), slice(None)))
+        bb = pl.load(row_ref, lead + (slice(None), pl.dslice(j * s, s)))
         # Accumulator input: pivot-band tiles were rewritten this round, so
         # their current value lives in scratch (== a/bb), not in w_ref.
         c = jnp.where(i == b, bb, jnp.where(j == b, a, w_ref[...]))
         for k0 in range(0, s, bk):
             c = _stage_compute(
-                c, a[:, k0:k0 + bk], bb[k0:k0 + bk, :], semiring, variant
+                c, a[..., :, k0:k0 + bk], bb[..., k0:k0 + bk, :],
+                semiring, variant,
             )
         o_ref[...] = c
 
 
+def _relax_succ(k, t, ts, a, asucc, bb):
+    """Strict-improvement relaxation step k, carrying successors.
+
+    cand = a[:,k] ⊗ bb[k,:]; where cand < t the distance AND the next hop
+    (asucc[:,k]) are taken — the exact update of ``core.paths``, ellipsis-
+    indexed so the same chain runs with or without a leading batch dim.
+    """
+    cand = a[..., :, k, None] + bb[..., k, None, :]
+    better = cand < t
+    return (
+        jnp.where(better, cand, t),
+        jnp.where(better, asucc[..., :, k, None], ts),
+    )
+
+
+def _round_succ_kernel(
+    oi_ref, oj_ref, w_ref, s_ref, ow_ref, os_ref,
+    rw_ref, cw_ref, rs_ref, cs_ref,
+    *, T: int, s: int, step_axis: int = 0,
+):
+    """One fused pivot round carrying a successor matrix (min-plus only).
+
+    Same multi-stage schedule as ``_round_kernel`` with four scratch bands:
+    closed distance row/col bands plus their successor bands.  Every phase
+    uses the strict-improvement (<) update, so outputs bit-match
+    ``core.paths.fw_blocked_with_successors``.
+    """
+    g = pl.program_id(step_axis)
+    i = oi_ref[g]
+    j = oj_ref[g]
+    b = oi_ref[0]
+    lead = (slice(None),) if w_ref.ndim == 3 else ()
+
+    @pl.when(g == 0)
+    def _phase1():
+        def body(k, c):
+            t, ts = c
+            return _relax_succ(k, t, ts, t, ts, t)
+
+        t, ts = jax.lax.fori_loop(0, s, body, (w_ref[...], s_ref[...]))
+        ow_ref[...] = t
+        os_ref[...] = ts
+        pl.store(rw_ref, lead + (slice(None), pl.dslice(j * s, s)), t)
+        pl.store(cw_ref, lead + (pl.dslice(i * s, s), slice(None)), t)
+        pl.store(rs_ref, lead + (slice(None), pl.dslice(j * s, s)), ts)
+        pl.store(cs_ref, lead + (pl.dslice(i * s, s), slice(None)), ts)
+
+    @pl.when((g >= 1) & (g < T))
+    def _phase2_row():
+        # Rows live in the pivot block → the a-side successor operand is the
+        # closed diagonal's successor tile.
+        d = pl.load(rw_ref, lead + (slice(None), pl.dslice(b * s, s)))
+        ds = pl.load(rs_ref, lead + (slice(None), pl.dslice(b * s, s)))
+
+        def body(k, c):
+            p, ps = c
+            return _relax_succ(k, p, ps, d, ds, p)
+
+        p, ps = jax.lax.fori_loop(0, s, body, (w_ref[...], s_ref[...]))
+        ow_ref[...] = p
+        os_ref[...] = ps
+        pl.store(rw_ref, lead + (slice(None), pl.dslice(j * s, s)), p)
+        pl.store(rs_ref, lead + (slice(None), pl.dslice(j * s, s)), ps)
+
+    @pl.when((g >= T) & (g < 2 * T - 1))
+    def _phase2_col():
+        # Columns k live in the pivot block → the a-side is the panel's own
+        # (evolving) distance/successor columns.
+        d = pl.load(rw_ref, lead + (slice(None), pl.dslice(b * s, s)))
+
+        def body(k, c):
+            p, ps = c
+            return _relax_succ(k, p, ps, p, ps, d)
+
+        p, ps = jax.lax.fori_loop(0, s, body, (w_ref[...], s_ref[...]))
+        ow_ref[...] = p
+        os_ref[...] = ps
+        pl.store(cw_ref, lead + (pl.dslice(i * s, s), slice(None)), p)
+        pl.store(cs_ref, lead + (pl.dslice(i * s, s), slice(None)), ps)
+
+    @pl.when(g >= 2 * T - 1)
+    def _phase3():
+        a = pl.load(cw_ref, lead + (pl.dslice(i * s, s), slice(None)))
+        asucc = pl.load(cs_ref, lead + (pl.dslice(i * s, s), slice(None)))
+        bb = pl.load(rw_ref, lead + (slice(None), pl.dslice(j * s, s)))
+        bsucc = pl.load(rs_ref, lead + (slice(None), pl.dslice(j * s, s)))
+        c = jnp.where(i == b, bb, jnp.where(j == b, a, w_ref[...]))
+        cs = jnp.where(i == b, bsucc, jnp.where(j == b, asucc, s_ref[...]))
+
+        def body(k, carry):
+            t, ts = carry
+            return _relax_succ(k, t, ts, a, asucc, bb)
+
+        c, cs = jax.lax.fori_loop(0, s, body, (c, cs))
+        ow_ref[...] = c
+        os_ref[...] = cs
+
+
+def _resolve_batch_block(B: int, n: int, s: int, batch_block: int | None,
+                         *, word: int, bk: int = 32, variant: str = "fori",
+                         successors: bool = False) -> int:
+    """Largest divisor of B (≤ requested) whose scratch bands fit VMEM."""
+    if batch_block is not None:
+        if B % batch_block:
+            raise ValueError(
+                f"batch_block={batch_block} must divide the batch size {B}"
+            )
+        return batch_block
+    from repro.apsp import plan  # call-time import: apsp imports this module
+
+    return plan.auto_batch_block(
+        B, n, s, bk=bk, variant=variant, word=word, successors=successors
+    )
+
+
+def _batch_grid_spec(pltpu, B, bb, n, s, T, scratch, extra_in=0):
+    """PrefetchScalarGridSpec for the batched round: leading batch grid dim,
+    (bb,s,s) tiles, per-graph scratch bands."""
+    spec = pl.BlockSpec((bb, s, s), lambda bi, g, oi, oj: (bi, oi[g], oj[g]))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B // bb, T * T + 2 * T - 1),
+        in_specs=[spec] * (1 + extra_in),
+        out_specs=[spec] * (1 + extra_in) if extra_in else spec,
+        scratch_shapes=scratch,
+    )
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_size", "bk", "variant", "semiring", "interpret"),
+    static_argnames=("block_size", "bk", "batch_block", "variant", "semiring",
+                     "interpret"),
 )
 def fw_round(
     w: jax.Array,
@@ -145,24 +306,32 @@ def fw_round(
     *,
     block_size: int = 128,
     bk: int = 32,
+    batch_block: int | None = None,
     variant: Variant = "fori",
     semiring: Semiring = MIN_PLUS,
     interpret: bool | None = None,
 ) -> jax.Array:
     """One fused pivot round: all three phases in a single ``pallas_call``.
 
-    w: (n, n) with n % block_size == 0; b: pivot round index (may be traced
-    — it only feeds the scalar-prefetch order arrays, never a shape).
+    w: (n, n) with n % block_size == 0, or (B, n, n) to run the same pivot
+    round of B graphs through one dispatch (leading batch grid dimension);
+    b: pivot round index (may be traced — it only feeds the scalar-prefetch
+    order arrays, never a shape).
     bk: phase-3 staging depth (clamped to a divisor of block_size).
+    batch_block: graphs per grid step in the batched case (must divide B;
+    None → largest divisor whose scratch bands fit the VMEM budget).
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
 
         interpret = default_interpret()
-    n = w.shape[0]
+    batched = w.ndim == 3
+    n = w.shape[-1]
     s = block_size
-    if w.shape != (n, n) or n % s:
-        raise ValueError(f"w must be (n,n) with n % {s} == 0, got {w.shape}")
+    if w.ndim not in (2, 3) or w.shape[-2] != n or n % s:
+        raise ValueError(
+            f"w must be (n,n) or (B,n,n) with n % {s} == 0, got {w.shape}"
+        )
     try:
         from jax.experimental.pallas import tpu as pltpu
     except Exception as e:  # pragma: no cover - pallas TPU module absent
@@ -172,25 +341,127 @@ def fw_round(
     T = n // s
     bk = _fit_block(s, bk)
     oi, oj = _round_order(b, T)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(T * T + 2 * T - 1,),
-        in_specs=[pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g]))],
-        out_specs=pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g])),
-        scratch_shapes=[
-            pltpu.VMEM((s, n), w.dtype),  # closed row band (diag at col b)
-            pltpu.VMEM((n, s), w.dtype),  # closed col band (diag at row b)
-        ],
-    )
+    word = jnp.dtype(w.dtype).itemsize
+    if batched:
+        B = w.shape[0]
+        bb = _resolve_batch_block(
+            B, n, s, batch_block, word=word, bk=bk, variant=variant
+        )
+        grid_spec = _batch_grid_spec(
+            pltpu, B, bb, n, s, T,
+            [pltpu.VMEM((bb, s, n), w.dtype),  # closed row bands, per graph
+             pltpu.VMEM((bb, n, s), w.dtype)],  # closed col bands, per graph
+        )
+        step_axis, semantics = 1, ("arbitrary", "arbitrary")
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T * T + 2 * T - 1,),
+            in_specs=[pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g]))],
+            out_specs=pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g])),
+            scratch_shapes=[
+                pltpu.VMEM((s, n), w.dtype),  # closed row band (diag at col b)
+                pltpu.VMEM((n, s), w.dtype),  # closed col band (diag at row b)
+            ],
+        )
+        step_axis, semantics = 0, ("arbitrary",)
     kern = functools.partial(
-        _round_kernel, T=T, s=s, bk=bk, semiring=semiring, variant=variant
+        _round_kernel, T=T, s=s, bk=bk, semiring=semiring, variant=variant,
+        step_axis=step_axis,
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, n), w.dtype),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
         interpret=interpret,
         compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=("arbitrary",)
+            dimension_semantics=semantics
         ),
     )(oi, oj, w)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "batch_block", "interpret"),
+)
+def fw_round_with_successors(
+    w: jax.Array,
+    succ: jax.Array,
+    b: jax.Array | int,
+    *,
+    block_size: int = 128,
+    batch_block: int | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused pivot round carrying distances AND next hops (min-plus).
+
+    w / succ: (n, n) or (B, n, n) distance and successor matrices (succ is
+    integer next-hop indices, -1 = no path).  Returns the closed pair for
+    pivot round ``b``; bit-matches one round of
+    ``core.paths.fw_blocked_with_successors``.
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    batched = w.ndim == 3
+    n = w.shape[-1]
+    s = block_size
+    if w.ndim not in (2, 3) or w.shape[-2] != n or n % s:
+        raise ValueError(
+            f"w must be (n,n) or (B,n,n) with n % {s} == 0, got {w.shape}"
+        )
+    if succ.shape != w.shape:
+        raise ValueError(f"succ shape {succ.shape} != w shape {w.shape}")
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception as e:  # pragma: no cover - pallas TPU module absent
+        raise NotImplementedError(
+            "fw_round_with_successors needs pallas TPU scratch"
+        ) from e
+    T = n // s
+    oi, oj = _round_order(b, T)
+    word = jnp.dtype(w.dtype).itemsize + jnp.dtype(succ.dtype).itemsize
+    out_shape = (
+        jax.ShapeDtypeStruct(w.shape, w.dtype),
+        jax.ShapeDtypeStruct(succ.shape, succ.dtype),
+    )
+    if batched:
+        B = w.shape[0]
+        bb = _resolve_batch_block(B, n, s, batch_block, word=word)
+        grid_spec = _batch_grid_spec(
+            pltpu, B, bb, n, s, T,
+            [pltpu.VMEM((bb, s, n), w.dtype),
+             pltpu.VMEM((bb, n, s), w.dtype),
+             pltpu.VMEM((bb, s, n), succ.dtype),
+             pltpu.VMEM((bb, n, s), succ.dtype)],
+            extra_in=1,
+        )
+        step_axis, semantics = 1, ("arbitrary", "arbitrary")
+    else:
+        spec = pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g]))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(T * T + 2 * T - 1,),
+            in_specs=[spec, spec],
+            out_specs=[spec, spec],
+            scratch_shapes=[
+                pltpu.VMEM((s, n), w.dtype),     # closed distance row band
+                pltpu.VMEM((n, s), w.dtype),     # closed distance col band
+                pltpu.VMEM((s, n), succ.dtype),  # successor row band
+                pltpu.VMEM((n, s), succ.dtype),  # successor col band
+            ],
+        )
+        step_axis, semantics = 0, ("arbitrary",)
+    kern = functools.partial(
+        _round_succ_kernel, T=T, s=s, step_axis=step_axis
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=semantics
+        ),
+    )(oi, oj, w, succ)

@@ -49,18 +49,26 @@ def _stage_compute(
     semiring: Semiring,
     variant: Variant,
 ) -> jax.Array:
-    """⊕-accumulate one (bm×bk)·(bk×bn) panel-slice stage into acc."""
-    bk = a_blk.shape[1]
+    """⊕-accumulate one (bm×bk)·(bk×bn) panel-slice stage into acc.
+
+    All indexing is ellipsis-relative so the same per-element ⊕/⊗ chain runs
+    with or without a leading batch-block dim ((bb,bm,bk)·(bb,bk,bn) → the
+    batched grid) — the 2-D lowering is unchanged op for op.
+    """
+    bk = a_blk.shape[-1]
     if variant == "broadcast":
         # Materializes (bm, bk, bn) in VMEM — fewer, fatter VPU ops.
         prod = semiring.add_reduce(
-            semiring.mul(a_blk[:, :, None], b_blk[None, :, :]), axis=1
+            semiring.mul(a_blk[..., :, :, None], b_blk[..., None, :, :]),
+            axis=-2,
         )
         return semiring.add(acc, prod)
 
     def body(kk, acc):
         # Rank-1 tropical update; a column/row pair broadcast across VREGs.
-        return semiring.add(acc, semiring.mul(a_blk[:, kk, None], b_blk[kk, None, :]))
+        return semiring.add(
+            acc, semiring.mul(a_blk[..., :, kk, None], b_blk[..., kk, None, :])
+        )
 
     if variant == "unroll":
         # The paper's loop-unrolling optimization (§4, "standard
@@ -71,9 +79,11 @@ def _stage_compute(
     return jax.lax.fori_loop(0, bk, body, acc)
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, *, semiring: Semiring, variant: Variant):
+def _matmul_kernel(
+    a_ref, b_ref, o_ref, *, semiring: Semiring, variant: Variant, k_axis: int = 2
+):
     """C = A ⊗⊕ B (no input accumulator)."""
-    k = pl.program_id(2)
+    k = pl.program_id(k_axis)
 
     @pl.when(k == 0)
     def _():
@@ -82,9 +92,11 @@ def _matmul_kernel(a_ref, b_ref, o_ref, *, semiring: Semiring, variant: Variant)
     o_ref[...] = _stage_compute(o_ref[...], a_ref[...], b_ref[...], semiring, variant)
 
 
-def _fused_kernel(c_ref, a_ref, b_ref, o_ref, *, semiring: Semiring, variant: Variant):
+def _fused_kernel(
+    c_ref, a_ref, b_ref, o_ref, *, semiring: Semiring, variant: Variant, k_axis: int = 2
+):
     """C_out = C_in ⊕ (A ⊗⊕ B) — the FW phase-3 relaxation, C resident."""
-    k = pl.program_id(2)
+    k = pl.program_id(k_axis)
 
     @pl.when(k == 0)
     def _():
@@ -103,8 +115,10 @@ def _fit_block(dim: int, want: int) -> int:
 
 
 def _grid_call(kernel, out_shape, grid, in_specs, out_specs, interpret, *args):
+    # Last grid dim is the sequential contraction; any leading dims (output
+    # tiles, and the batch dim of a batched call) are parallel.
     compiler_params = compat.tpu_compiler_params(
-        dimension_semantics=("parallel", "parallel", "arbitrary")
+        dimension_semantics=("parallel",) * (len(grid) - 1) + ("arbitrary",)
     )
     return pl.pallas_call(
         kernel,
@@ -133,31 +147,54 @@ def semiring_matmul(
     variant: Variant = "fori",
     interpret: bool = False,
 ) -> jax.Array:
-    """Blocked, staged C [⊕=] A ⊗⊕ B.
+    """Blocked, staged C [⊕=] A ⊗⊕ B, optionally over a leading batch dim.
 
-    a (m,k), b (k,n), optional c (m,n).  m % bm == n % bn == k % bk == 0.
-    ``bk`` is the staging depth — the TPU analogue of the paper's m=8
-    shared-memory slice.  ``variant`` selects the inner-loop lowering
-    ("fori" | "unroll" | "broadcast"), mirroring the paper's
-    instruction-level optimization axis.
+    a (m,k) or (B,m,k), b (k,n) or (B,k,n), optional c of the matching
+    shape.  m % bm == n % bn == k % bk == 0.  ``bk`` is the staging depth —
+    the TPU analogue of the paper's m=8 shared-memory slice.  ``variant``
+    selects the inner-loop lowering ("fori" | "unroll" | "broadcast"),
+    mirroring the paper's instruction-level optimization axis.  Batched
+    inputs run the B semiring products through ONE dispatch with a leading
+    (parallel) batch grid dimension; per-element results are identical to B
+    separate calls.
     """
-    m, k = a.shape
-    k2, n = b.shape
+    if a.ndim == 3:
+        if b.ndim != 3 or a.shape[0] != b.shape[0]:
+            raise ValueError(f"batched operands disagree: {a.shape} @ {b.shape}")
+        B, m, k = a.shape
+        k2, n = b.shape[1:]
+    else:
+        B = None
+        m, k = a.shape
+        k2, n = b.shape
     if k != k2:
         raise ValueError(f"contraction mismatch {a.shape} @ {b.shape}")
     bm, bn, bk = _fit_block(m, bm), _fit_block(n, bn), _fit_block(k, bk)
     if m % bm or n % bn or k % bk:
         raise ValueError(f"shape ({m},{k})x({k2},{n}) not divisible by ({bm},{bn},{bk})")
-    grid = (m // bm, n // bn, k // bk)
-    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
-    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
-    c_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
-    out_shape = jax.ShapeDtypeStruct((m, n), a.dtype)
+    if B is None:
+        grid = (m // bm, n // bn, k // bk)
+        a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+        b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+        c_spec = pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j))
+        out_shape = jax.ShapeDtypeStruct((m, n), a.dtype)
+        k_axis = 2
+    else:
+        grid = (B, m // bm, n // bn, k // bk)
+        a_spec = pl.BlockSpec((1, bm, bk), lambda g, i, j, kk: (g, i, kk))
+        b_spec = pl.BlockSpec((1, bk, bn), lambda g, i, j, kk: (g, kk, j))
+        c_spec = pl.BlockSpec((1, bm, bn), lambda g, i, j, kk: (g, i, j))
+        out_shape = jax.ShapeDtypeStruct((B, m, n), a.dtype)
+        k_axis = 3
 
     if c is None:
-        kern = functools.partial(_matmul_kernel, semiring=semiring, variant=variant)
+        kern = functools.partial(
+            _matmul_kernel, semiring=semiring, variant=variant, k_axis=k_axis
+        )
         return _grid_call(kern, out_shape, grid, [a_spec, b_spec], c_spec, interpret, a, b)
-    kern = functools.partial(_fused_kernel, semiring=semiring, variant=variant)
+    kern = functools.partial(
+        _fused_kernel, semiring=semiring, variant=variant, k_axis=k_axis
+    )
     return _grid_call(
         kern, out_shape, grid, [c_spec, a_spec, b_spec], c_spec, interpret, c, a, b
     )

@@ -15,7 +15,7 @@ from repro.core.semiring import MIN_PLUS, OR_AND, Semiring
 from repro.kernels import ref
 from repro.kernels.fw_phase1 import fw_phase1
 from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
-from repro.kernels.fw_round import fw_round
+from repro.kernels.fw_round import fw_round, fw_round_with_successors
 from repro.kernels.minplus_matmul import semiring_matmul
 
 
@@ -84,6 +84,7 @@ __all__ = [
     "fw_phase2_col",
     "fw_phase3",
     "fw_round",
+    "fw_round_with_successors",
     "semiring_matmul",
     "transitive_closure",
     "ref",

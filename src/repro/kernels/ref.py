@@ -4,6 +4,15 @@ Each ``*_ref`` is the semantic ground truth used by the allclose sweeps in
 ``tests/test_kernels.py``.  They are deliberately written in the most direct
 (unblocked) form — no staging, no tiling — so a kernel bug cannot be
 mirrored in its oracle.
+
+``fw_round_ref`` / ``fw_round_with_successors_ref`` are different in kind:
+they are the *execution-grade XLA lowerings* of the fused round schedule,
+evaluating the exact per-element ⊕/⊗ chain of ``kernels.fw_round`` (bitwise
+— asserted in tests/test_fw_round.py), batch-rank-agnostic.  On CPU, where
+Mosaic cannot compile and the Pallas interpreter's per-grid-step emulation
+dominates wall-clock, ``solve``/``ApspEngine`` run the fused method through
+these instead, so benchmarks measure the algorithm rather than the
+interpreter; on TPU the real kernel runs.
 """
 from __future__ import annotations
 
@@ -78,6 +87,138 @@ def fw_phase3_ref(
         return semiring.add(w, semiring.mul(col_band[:, k, None], row_band[k, None, :]))
 
     return jax.lax.fori_loop(0, s, body, w)
+
+
+def _dyn_slice(w, o_r, o_c, s_r, s_c):
+    """dynamic_slice of the trailing two dims, batch-rank-agnostic."""
+    lead = w.shape[:-2]
+    return jax.lax.dynamic_slice(
+        w, (0,) * len(lead) + (o_r, o_c), lead + (s_r, s_c)
+    )
+
+
+def _dyn_update(w, u, o_r, o_c):
+    lead = w.shape[:-2]
+    return jax.lax.dynamic_update_slice(w, u, (0,) * len(lead) + (o_r, o_c))
+
+
+def fw_round_ref(
+    w: jax.Array,
+    b: jax.Array | int,
+    *,
+    block_size: int,
+    bk: int = 32,
+    variant: str = "fori",
+    semiring: Semiring = MIN_PLUS,
+) -> jax.Array:
+    """XLA lowering of ONE fused pivot round — bitwise ``fw_round``.
+
+    w: (…, n, n) with n % block_size == 0; b may be traced.  Phase 1/2 run
+    the same k-sequential recurrences on the closed diagonal/bands; phase 3
+    re-relaxes the whole matrix (bands spliced in as the accumulator input,
+    exactly the scratch-read of the kernel) through the same
+    ``_stage_compute`` bk-chunk sequence.  Elementwise chains are identical
+    to the Pallas kernel's, so outputs are bit-equal, batched or not.
+    """
+    from repro.kernels.minplus_matmul import _fit_block, _stage_compute
+
+    n = w.shape[-1]
+    s = block_size
+    bk = _fit_block(s, bk)
+    o = jnp.asarray(b, jnp.int32) * s
+
+    diag = _dyn_slice(w, o, o, s, s)
+
+    def p1(k, t):
+        return semiring.add(t, semiring.mul(t[..., :, k, None], t[..., k, None, :]))
+
+    diag = jax.lax.fori_loop(0, s, p1, diag)
+
+    row = _dyn_slice(w, o, 0, s, n)
+
+    def p2r(k, p):
+        return semiring.add(p, semiring.mul(diag[..., :, k, None], p[..., k, None, :]))
+
+    row = jax.lax.fori_loop(0, s, p2r, row)
+    row = _dyn_update(row, diag, 0, o)
+
+    col = _dyn_slice(w, 0, o, n, s)
+
+    def p2c(k, p):
+        return semiring.add(p, semiring.mul(p[..., :, k, None], diag[..., k, None, :]))
+
+    col = jax.lax.fori_loop(0, s, p2c, col)
+    col = _dyn_update(col, diag, o, 0)
+
+    # Phase 3 accumulator: band tiles take their closed (scratch) values.
+    w = _dyn_update(w, row, o, 0)
+    w = _dyn_update(w, col, 0, o)
+    for k0 in range(0, s, bk):
+        w = _stage_compute(
+            w, col[..., :, k0:k0 + bk], row[..., k0:k0 + bk, :],
+            semiring, variant,
+        )
+    return w
+
+
+def fw_round_with_successors_ref(
+    w: jax.Array,
+    succ: jax.Array,
+    b: jax.Array | int,
+    *,
+    block_size: int,
+) -> tuple[jax.Array, jax.Array]:
+    """XLA lowering of one successor-tracking fused round (min-plus).
+
+    Bitwise ``fw_round_with_successors`` — it runs the kernel's own
+    ``_relax_succ`` update, batch-rank-agnostic, so the two lowerings
+    cannot drift.
+    """
+    from repro.kernels.fw_round import _relax_succ as relax
+
+    n = w.shape[-1]
+    s = block_size
+    o = jnp.asarray(b, jnp.int32) * s
+
+    diag = _dyn_slice(w, o, o, s, s)
+    dsucc = _dyn_slice(succ, o, o, s, s)
+
+    def p1(k, c):
+        t, ts = c
+        return relax(k, t, ts, t, ts, t)
+
+    diag, dsucc = jax.lax.fori_loop(0, s, p1, (diag, dsucc))
+
+    row = _dyn_slice(w, o, 0, s, n)
+    rsucc = _dyn_slice(succ, o, 0, s, n)
+
+    def p2r(k, c):
+        p, ps = c
+        return relax(k, p, ps, diag, dsucc, p)
+
+    row, rsucc = jax.lax.fori_loop(0, s, p2r, (row, rsucc))
+    row = _dyn_update(row, diag, 0, o)
+    rsucc = _dyn_update(rsucc, dsucc, 0, o)
+
+    col = _dyn_slice(w, 0, o, n, s)
+    csucc = _dyn_slice(succ, 0, o, n, s)
+
+    def p2c(k, c):
+        p, ps = c
+        return relax(k, p, ps, p, ps, diag)
+
+    col, csucc = jax.lax.fori_loop(0, s, p2c, (col, csucc))
+    col = _dyn_update(col, diag, o, 0)
+    csucc = _dyn_update(csucc, dsucc, o, 0)
+
+    w = _dyn_update(_dyn_update(w, row, o, 0), col, 0, o)
+    succ = _dyn_update(_dyn_update(succ, rsucc, o, 0), csucc, 0, o)
+
+    def p3(k, c):
+        t, ts = c
+        return relax(k, t, ts, col, csucc, row)
+
+    return jax.lax.fori_loop(0, s, p3, (w, succ))
 
 
 def flash_decode_ref(

@@ -1,16 +1,23 @@
-"""Serving engine: batched prefill + lockstep greedy/temperature decode.
+"""Serving engines: LM generation and APSP shortest-path routing.
 
-The engine owns the jitted prefill/decode functions with their cache
-shardings (sequence-sharded KV → split-K distributed decode, DESIGN.md §6)
-and a host-side generate loop.  Continuous batching at cluster scale would
-slot into `generate`'s step loop (admission at cache-page granularity);
-here requests are batched per call — the step functions are the deployable
-artifact, exercised by the dry-run for the decode shapes.
+Two session objects live here:
+
+  * ``Engine`` — batched prefill + lockstep greedy/temperature decode for
+    the LM stack (jitted prefill/decode with their cache shardings,
+    sequence-sharded KV → split-K distributed decode, DESIGN.md §6).
+  * ``RoutingEngine`` — the paper-side serving scenario: many users
+    querying shortest paths over many (mutating) graphs.  It fronts an
+    ``repro.apsp.ApspEngine`` session: graph registration marks tables
+    dirty, ``refresh()`` re-solves *all* dirty graphs in one bucketed
+    batched solve (distances + successor matrices through the fused round
+    kernel's batch grid), and queries are O(path length) host-side walks
+    over the cached successor tables — no per-query device work at all.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any
+from typing import Any, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -181,3 +188,176 @@ class Engine:
         return jax.random.categorical(k, logits / self.temperature, axis=-1).astype(
             jnp.int32
         )
+
+
+# --------------------------------------------------------------------------
+# APSP shortest-path serving (the paper's routing-table scenario)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RouteReply:
+    """One answered shortest-path query."""
+
+    graph_id: str
+    src: int
+    dst: int
+    path: list[int]          # [] when dst is unreachable from src
+    cost: float              # +inf when unreachable
+
+    @property
+    def reachable(self) -> bool:
+        return bool(self.path)
+
+
+@dataclasses.dataclass
+class _RoutingTable:
+    """Solved state for one registered graph: distances + next hops."""
+
+    dist: np.ndarray
+    succ: np.ndarray
+    version: int
+
+
+class RoutingEngine:
+    """Serve shortest-path queries over many graphs via one ``ApspEngine``.
+
+        router = RoutingEngine()
+        router.add_graph("dc-east", w_east)
+        router.add_graph("dc-west", w_west)
+        router.refresh()                       # ONE bucketed batched solve
+        reply = router.query("dc-east", 12, 17)
+
+    The serving contract: graph mutations (``add_graph`` / ``update_graph``)
+    only mark tables dirty; ``refresh()`` re-solves every dirty graph in a
+    single ``ApspEngine.solve_many`` call — ragged sizes bucket into padded
+    batches and each bucket runs the fused round kernel's native batch grid
+    with successor tracking.  Queries never touch the device: they walk the
+    cached successor matrix on the host (O(path length)).  ``query`` on a
+    stale graph raises unless ``auto_refresh`` (the default) is on.
+    """
+
+    def __init__(
+        self,
+        *,
+        engine=None,
+        method: str = "auto",
+        block_size: int | None = None,
+        interpret: bool | None = None,
+        auto_refresh: bool = True,
+    ):
+        from repro.apsp import ApspEngine
+
+        self.engine = engine or ApspEngine(
+            method=method, block_size=block_size, interpret=interpret,
+        )
+        self.auto_refresh = auto_refresh
+        self._graphs: dict[str, np.ndarray] = {}
+        self._tables: dict[str, _RoutingTable] = {}
+        self._dirty: list[str] = []  # insertion-ordered; drives batching
+        self._version = 0
+
+    # ------------------------------------------------------------- registry
+    def add_graph(self, graph_id: str, w) -> None:
+        """Register (or replace) a graph; its tables become stale.
+
+        The matrix is copied: later in-place mutation of the caller's array
+        cannot desynchronize the registry from the solved tables — graph
+        changes go through ``update_graph``/``fail_link`` so they mark the
+        tables dirty.
+        """
+        w = np.array(w, copy=True)
+        if w.ndim != 2 or w.shape[0] != w.shape[1]:
+            raise ValueError(f"graph {graph_id!r} must be (n,n), got {w.shape}")
+        w.flags.writeable = False
+        self._graphs[graph_id] = w
+        if graph_id not in self._dirty:
+            self._dirty.append(graph_id)
+
+    update_graph = add_graph
+
+    def fail_link(self, graph_id: str, u: int, v: int, *, symmetric=True) -> None:
+        """Serving-side mutation: remove edge(s) and mark the graph dirty."""
+        w = self._graphs[graph_id].copy()
+        w[u, v] = np.inf
+        if symmetric:
+            w[v, u] = np.inf
+        self.add_graph(graph_id, w)
+
+    def remove_graph(self, graph_id: str) -> None:
+        self._graphs.pop(graph_id, None)
+        self._tables.pop(graph_id, None)
+        if graph_id in self._dirty:
+            self._dirty.remove(graph_id)
+
+    @property
+    def graph_ids(self) -> list[str]:
+        return list(self._graphs)
+
+    @property
+    def dirty_count(self) -> int:
+        return len(self._dirty)
+
+    # -------------------------------------------------------------- solving
+    def refresh(self) -> int:
+        """Re-solve every dirty graph in ONE bucketed batched solve.
+
+        Returns the number of graphs refreshed.  Distances and successor
+        matrices are pulled to the host once here so queries are pure
+        numpy walks.
+        """
+        if not self._dirty:
+            return 0
+        ids = list(self._dirty)
+        results = self.engine.solve_many(
+            [self._graphs[g] for g in ids], successors=True
+        )
+        self._version += 1
+        for gid, res in zip(ids, results):
+            dist, succ = np.asarray(res.dist), np.asarray(res.succ)
+            # Read-only: distances()/query() hand these out; a caller must
+            # not be able to corrupt the cache in place.
+            for a in (dist, succ):
+                a.flags.writeable = False
+            self._tables[gid] = _RoutingTable(
+                dist=dist, succ=succ, version=self._version,
+            )
+        self._dirty.clear()
+        return len(ids)
+
+    # -------------------------------------------------------------- queries
+    def _fresh_table(self, graph_id: str) -> _RoutingTable:
+        """The staleness contract shared by every read path: a dirty graph
+        refreshes under ``auto_refresh`` and raises otherwise."""
+        if graph_id not in self._graphs:
+            raise KeyError(f"unknown graph {graph_id!r}")
+        if graph_id in self._dirty:
+            if not self.auto_refresh:
+                raise RuntimeError(
+                    f"graph {graph_id!r} is stale; call refresh()"
+                )
+            self.refresh()
+        return self._tables[graph_id]
+
+    def query(self, graph_id: str, src: int, dst: int) -> RouteReply:
+        """Shortest path + cost from the cached routing table."""
+        from repro.core.paths import extract_path
+
+        table = self._fresh_table(graph_id)
+        path = extract_path(table.succ, src, dst)
+        cost = float(table.dist[src, dst])
+        return RouteReply(
+            graph_id=graph_id, src=src, dst=dst, path=path, cost=cost
+        )
+
+    def query_many(
+        self, requests: Iterable[tuple[str, int, int]]
+    ) -> list[RouteReply]:
+        """Answer a request batch; at most one refresh for all of them."""
+        requests = list(requests)
+        if self.auto_refresh and any(g in self._dirty for g, _, _ in requests):
+            self.refresh()
+        return [self.query(g, s, d) for g, s, d in requests]
+
+    def distances(self, graph_id: str) -> np.ndarray:
+        """The cached (refreshing if stale) distance matrix of one graph."""
+        return self._fresh_table(graph_id).dist

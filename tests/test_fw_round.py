@@ -3,11 +3,18 @@
   * bit-identity: the fused one-dispatch round is bitwise equal to the seed
     4-kernel lowering (``fw_staged(unroll_rounds=True, fused=False)``)
     across semirings, dtypes, and round counts — not merely allclose;
+  * the batch grid: (B,n,n) inputs through fw_round / the phase kernels /
+    fw_staged are bitwise equal to B per-graph runs, for any batch block;
+  * successor tracking through the fused round
+    (``fw_round_with_successors`` / ``fw_staged_with_successors``)
+    bit-matches ``fw_blocked_with_successors``, single and batched, in both
+    the Pallas and the execution-grade XLA ("ref") lowerings;
   * per-round pallas_call count drops from 4 to 1 in the jaxpr;
   * arbitrary (non-power-of-two) n round-trips through ``solve`` padding;
   * the phase-2 band kernels fit their tile to any n (regression for the
     ``n % bt`` crash at default bt=512);
-  * the plan-layer VMEM/occupancy model and autotune sweep are coherent.
+  * the plan-layer VMEM/occupancy model (now batch-aware) and autotune
+    sweep are coherent.
 """
 import jax
 import jax.numpy as jnp
@@ -17,11 +24,16 @@ import pytest
 from repro.apsp import plan, solve
 from repro.core.floyd_warshall import fw_naive
 from repro.core.graph import random_digraph
+from repro.core.paths import fw_blocked_with_successors
 from repro.core.semiring import MAX_MIN, MIN_PLUS, SEMIRINGS
-from repro.core.staged import fw_staged
+from repro.core.staged import fw_staged, fw_staged_with_successors
 from repro.kernels.fw_phase1 import fw_phase1
 from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
-from repro.kernels.fw_round import _round_order, fw_round
+from repro.kernels.fw_round import (
+    _round_order,
+    fw_round,
+    fw_round_with_successors,
+)
 from repro.kernels.minplus_matmul import semiring_matmul
 from repro.kernels.ref import fw_phase2_col_ref, fw_phase2_row_ref
 
@@ -104,6 +116,141 @@ def test_fw_round_matches_legacy_round_sequence(n, s, bk):
         wl = legacy_round(wl, b)
         wf = fw_round(wf, b, block_size=s, bk=bk, interpret=True)
         assert np.array_equal(np.asarray(wl), np.asarray(wf)), f"round {b}"
+
+
+# ------------------------------------------------------------- batch grid
+def _batch(B, n, seed0=0):
+    return jnp.asarray(np.stack(
+        [random_digraph(n, density=0.6, seed=seed0 + i) for i in range(B)]
+    ))
+
+
+@pytest.mark.parametrize("batch_block", [None, 1, 2])
+def test_fw_round_batched_bitwise_per_graph(batch_block):
+    """(B,n,n) through the leading batch grid dim == B per-graph rounds."""
+    B, n, s = 4, 64, 32
+    wb = _batch(B, n)
+    got = wb
+    want = [wb[i] for i in range(B)]
+    for b in range(n // s):
+        got = fw_round(got, b, block_size=s, bk=16,
+                       batch_block=batch_block, interpret=True)
+        want = [fw_round(g, b, block_size=s, bk=16, interpret=True)
+                for g in want]
+    for i in range(B):
+        assert np.array_equal(np.asarray(got[i]), np.asarray(want[i]))
+
+
+def test_fw_round_batch_block_must_divide():
+    wb = _batch(3, 32)
+    with pytest.raises(ValueError):
+        fw_round(wb, 0, block_size=32, batch_block=2, interpret=True)
+
+
+@pytest.mark.parametrize("name", ["min_plus", "plus_mul"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_fw_staged_batched_bitwise_per_graph(name, fused):
+    """Both round lowerings run the batch natively, bitwise == per-graph
+    (plus_mul included: non-idempotent ⊕ catches any chain reordering)."""
+    sr = SEMIRINGS[name]
+    rng = np.random.default_rng(3)
+    if name == "plus_mul":
+        wb = jnp.asarray(rng.uniform(0, 0.01, size=(3, 64, 64)).astype(np.float32))
+    else:
+        wb = _batch(3, 64, seed0=9)
+    kw = dict(block_size=32, bm=32, bn=32, bk=16, semiring=sr, interpret=True)
+    batched = fw_staged(wb, fused=fused, **kw)
+    for i in range(3):
+        single = fw_staged(wb[i], fused=fused, **kw)
+        assert np.array_equal(np.asarray(batched[i]), np.asarray(single))
+
+
+def test_phase_kernels_batched_bitwise():
+    B, s, n = 3, 32, 96
+    wb = _batch(B, n, seed0=4)
+    diag = fw_phase1(wb[:, :s, :s], interpret=True)
+    row = fw_phase2_row(diag, wb[:, :s, :], interpret=True)
+    col = fw_phase2_col(diag, wb[:, :, :s], interpret=True)
+    mm = semiring_matmul(wb, wb, wb, bm=32, bn=32, bk=16, interpret=True)
+    for i in range(B):
+        assert np.array_equal(
+            np.asarray(diag[i]), np.asarray(fw_phase1(wb[i, :s, :s], interpret=True)))
+        assert np.array_equal(
+            np.asarray(row[i]),
+            np.asarray(fw_phase2_row(diag[i], wb[i, :s, :], interpret=True)))
+        assert np.array_equal(
+            np.asarray(col[i]),
+            np.asarray(fw_phase2_col(diag[i], wb[i, :, :s], interpret=True)))
+        assert np.array_equal(
+            np.asarray(mm[i]),
+            np.asarray(semiring_matmul(wb[i], wb[i], wb[i], bm=32, bn=32,
+                                       bk=16, interpret=True)))
+
+
+# ----------------------------------------------- fused successor tracking
+@pytest.mark.parametrize("lowering", ["pallas", "ref"])
+def test_fused_successors_bit_match_blocked(lowering):
+    """The satellite acceptance: the fused successor round == the blocked
+    successor path, distances AND next hops, bit for bit."""
+    n, s = 96, 32
+    w = _batch(1, n, seed0=2)[0]
+    d_ref, s_ref = fw_blocked_with_successors(w, block_size=s)
+    d_got, s_got = fw_staged_with_successors(
+        w, block_size=s, interpret=True, lowering=lowering)
+    assert np.array_equal(np.asarray(d_got), np.asarray(d_ref))
+    assert np.array_equal(np.asarray(s_got), np.asarray(s_ref))
+
+
+@pytest.mark.parametrize("lowering", ["pallas", "ref"])
+def test_fused_successors_batched(lowering):
+    B, n, s = 3, 64, 32
+    wb = _batch(B, n, seed0=6)
+    d_got, s_got = fw_staged_with_successors(
+        wb, block_size=s, interpret=True, lowering=lowering)
+    for i in range(B):
+        d_ref, s_ref = fw_blocked_with_successors(wb[i], block_size=s)
+        assert np.array_equal(np.asarray(d_got[i]), np.asarray(d_ref))
+        assert np.array_equal(np.asarray(s_got[i]), np.asarray(s_ref))
+
+
+def test_fw_round_with_successors_rejects_bad_shapes():
+    w = jnp.zeros((32, 32))
+    with pytest.raises(ValueError):
+        fw_round_with_successors(w, jnp.zeros((32, 16), jnp.int32), 0,
+                                 block_size=32, interpret=True)
+
+
+def test_solve_fused_successors_native():
+    """solve(method='fused', successors=True) no longer falls back to the
+    blocked multi-dispatch path — and still reproduces its tables."""
+    w = random_digraph(70, density=0.5, seed=11)
+    res = solve(w, method="fused", block_size=32, successors=True)
+    assert res.method == "fused"  # no silent fallback
+    ref = solve(w, method="blocked", block_size=32, successors=True)
+    assert np.array_equal(np.asarray(res.dist), np.asarray(ref.dist))
+    assert np.array_equal(np.asarray(res.succ), np.asarray(ref.succ))
+
+
+# ------------------------------------------------- ref (XLA) round lowering
+@pytest.mark.parametrize("name", sorted(SEMIRINGS))
+def test_ref_round_lowering_bitwise(name):
+    """fused="ref" (what solve runs on CPU) == the Pallas interpreter,
+    bit for bit, on every semiring."""
+    sr = SEMIRINGS[name]
+    rng = np.random.default_rng(17)
+    if name == "or_and":
+        w = (rng.uniform(size=(64, 64)) < 0.1).astype(np.float32)
+        np.fill_diagonal(w, 1.0)
+    elif name == "plus_mul":
+        w = rng.uniform(0.0, 0.01, size=(64, 64)).astype(np.float32)
+    else:
+        w = rng.uniform(1.0, 10.0, size=(64, 64)).astype(np.float32)
+        np.fill_diagonal(w, 0.0)
+    w = jnp.asarray(w)
+    kw = dict(block_size=32, bk=16, semiring=sr)
+    pallas = fw_staged(w, interpret=True, **kw)
+    ref = fw_staged(w, fused="ref", **kw)
+    assert np.array_equal(np.asarray(pallas), np.asarray(ref))
 
 
 # -------------------------------------------------------- solve() integration
@@ -202,6 +349,39 @@ def test_plan_fused_model():
     assert plan.fused_round_steps(1024, 128) == 8 * 8 + 2 * 8 - 1
     # one read + one write per grid step, (s,s) words each.
     assert plan.fused_round_hbm_bytes(1024, 128) == 2 * 79 * 128 * 128 * 4
+
+
+def test_plan_batch_models():
+    # per-graph scratch bands: the footprint scales linearly in batch block.
+    one = plan.fused_round_vmem_bytes(1024, 128, 32)
+    assert plan.fused_round_vmem_bytes(1024, 128, 32, batch=4) == 4 * one
+    assert plan.fused_round_hbm_bytes(1024, 128, batch=8) == (
+        8 * plan.fused_round_hbm_bytes(1024, 128)
+    )
+    assert plan.fused_round_steps(1024, 128, batch=2) == (
+        2 * plan.fused_round_steps(1024, 128)
+    )
+    # auto_batch_block: fattest divisor of B under the budget; 1 if nothing
+    # fatter fits; successors doubles the footprint and can halve the block.
+    assert plan.auto_batch_block(16, 128, 32) == 16
+    assert plan.auto_batch_block(16, 128, 32, vmem_budget=2 * one) >= 1
+    tight = plan.auto_batch_block(
+        16, 1024, 128, vmem_budget=4 * one, successors=False)
+    tight_s = plan.auto_batch_block(
+        16, 1024, 128, vmem_budget=4 * one, successors=True)
+    assert tight_s <= tight
+    assert 16 % plan.auto_batch_block(16, 1024, 128) == 0
+    with pytest.raises(ValueError):
+        plan.auto_batch_block(0, 128, 32)
+    # batched candidates carry batch_block and scale totals by the batch.
+    cands = plan.fw_candidates(1024, batch=8)
+    fused = [c for c in cands if c["impl"] == "fused"]
+    assert fused and all(8 % c["batch_block"] == 0 for c in fused)
+    base = {(c["impl"], c["block_size"], c["bm"], c["bk"]): c
+            for c in plan.fw_candidates(1024)}
+    for c in cands:
+        b = base[(c["impl"], c["block_size"], c["bm"], c["bk"])]
+        assert c["hbm_bytes_per_round"] == 8 * b["hbm_bytes_per_round"]
 
 
 def test_plan_candidates_and_autotune():
