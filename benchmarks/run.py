@@ -9,7 +9,11 @@ trajectory is machine-trackable across PRs.
   fw_batched       — batched solve() ladder (many small graphs at once):
                      sequential loop vs vmap-wrapped vs the fused round's
                      native batch grid vs a warm ApspEngine cache
-  dist_fw          — multi-pod distributed FW (subprocess, host devices)
+  fw_dist          — distributed FW ladder (subprocess, 8 host devices):
+                     per-round ms for the fused bordered round vs the
+                     per-phase lowering, whole-solve wall, and the
+                     measured-vs-model SUMMA comm efficiency (collective
+                     bytes parsed from the compiled HLO)
   kernel_sweep     — staged phase-3 kernel parameter sweep (interpret
                      correctness + VMEM-footprint arithmetic; see
                      EXPERIMENTS.md §Perf for the roofline-side analysis)
@@ -122,28 +126,69 @@ def bench_fw_batched():
     return rows
 
 
-def bench_dist_fw():
-    """Distributed FW wall time on 8 host devices (absolute numbers are
-    host-CPU; the derived column is comm volume per the SUMMA bound)."""
-    rows = []
-    for ndev, n, bs in ((8, 512, 64),):
-        t0 = time.perf_counter()
-        env = dict(os.environ)
-        env["PYTHONPATH"] = os.path.join(REPO, "src")
-        env.pop("XLA_FLAGS", None)
-        res = subprocess.run(
-            [sys.executable, "-m", "repro.launch.fw_dist_check",
-             "--devices", str(ndev), "--n", str(n), "--bs", str(bs)],
-            capture_output=True, text=True, timeout=600, env=env, cwd=REPO,
+DIST_NDEV, DIST_N, DIST_BS = 8, 512, 64
+
+
+def _dist_metrics(backend: str) -> dict:
+    """Run fw_dist_check --bench in a subprocess and parse its METRICS line.
+
+    Subprocess because the XLA host-device count is locked at first jax
+    init; the main benchmark process must keep seeing one device.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.fw_dist_check",
+         "--devices", str(DIST_NDEV), "--n", str(DIST_N),
+         "--bs", str(DIST_BS), "--backend", backend, "--bench"],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+    )
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"fw_dist_check --bench ({backend}) failed:\n{res.stdout}\n{res.stderr}"
         )
-        dt = time.perf_counter() - t0
-        ok = "OK" if res.returncode == 0 else "FAIL"
-        # SUMMA comm bound from the same (R, C) factorization the check
-        # actually runs on (repro.apsp.plan — was hardcoded R=ndev//2, C=2).
-        R, C = plan.mesh_factorization(ndev)
-        comm = plan.summa_comm_bound_bytes(n, R, C)
-        rows.append((f"dist_fw/{ok}", f"ndev={ndev},n={n}", dt * 1e6,
-                     f"comm={comm/1e6:.2f}MB"))
+    for line in res.stdout.splitlines():
+        if line.startswith("METRICS "):
+            return json.loads(line[len("METRICS "):])
+    raise RuntimeError(f"no METRICS line in fw_dist_check output:\n{res.stdout}")
+
+
+def bench_fw_dist():
+    """Distributed FW ladder on 8 host devices: per-round time + comm check.
+
+    Replaces the old bare ``dist_fw/OK`` success flag with numbers the perf
+    trajectory can track:
+
+      round_ms_fused  — per-round wall time, fused bordered round/device
+      round_ms_phases — per-round wall time, per-phase jnp lowering
+      solve           — whole-solve wall time, fused path, measured as ONE
+                        jitted all-rounds call (what solve/engine dispatch)
+      comm_efficiency_pct — SUMMA lower bound / collective bytes actually
+                        found in the compiled per-round HLO (×100; the
+                        measured-vs-model check of plan.dist_round_comm_bytes
+                        — derived column shows both byte counts)
+
+    Absolute times are host-CPU (collectives are memcpys); the comm bytes
+    and the fused-vs-phases ratio are the portable signals.
+    """
+    rows = []
+    params = f"ndev={DIST_NDEV},n={DIST_N},bs={DIST_BS}"
+    fused = _dist_metrics("fused")
+    phases = _dist_metrics("jnp")
+    rows.append((f"fw_dist/round_ms_fused", params, fused["round_ms"] * 1e3,
+                 f"{fused['rounds']}rounds,1disp/round"))
+    rows.append((f"fw_dist/round_ms_phases", params, phases["round_ms"] * 1e3,
+                 f"{phases['rounds']}rounds,"
+                 f"speedup={phases['round_ms']/fused['round_ms']:.2f}x_fused"))
+    rows.append((f"fw_dist/solve", params, fused["solve_ms"] * 1e3,
+                 f"{DIST_N**3/(fused['solve_ms']*1e-3)/1e9:.2f}Gtasks/s"))
+    eff = fused["comm_efficiency_measured"]
+    rows.append((f"fw_dist/comm_efficiency_pct", params,
+                 (eff or 0.0) * 100.0,
+                 f"measured={fused['comm_measured_bytes']}B,"
+                 f"model={fused['comm_model_bytes']:.0f}B,"
+                 f"bound={fused['summa_bound_bytes_per_round']:.0f}B/round"))
     return rows
 
 
@@ -235,7 +280,7 @@ TABLES = {
     "fw_table1": bench_fw_table1,
     "fw_scaling": bench_fw_scaling,
     "fw_batched": bench_fw_batched,
-    "dist_fw": bench_dist_fw,
+    "fw_dist": bench_fw_dist,
     "kernel_sweep": bench_kernel_sweep,
     "fw_fused": bench_fw_fused,
 }
@@ -262,7 +307,11 @@ def expected_keys() -> dict[str, list[str]]:
                        "fw_batched/sequential[B=16,n=100]",
                        "fw_batched/fused[B=16,n=100]",
                        "fw_batched/engine_warm[B=16,n=100]"],
-        "dist_fw": ["dist_fw/OK[ndev=8,n=512]"],
+        "fw_dist": [
+            f"fw_dist/{k}[ndev={DIST_NDEV},n={DIST_N},bs={DIST_BS}]"
+            for k in ("round_ms_fused", "round_ms_phases", "solve",
+                      "comm_efficiency_pct")
+        ],
         "kernel_sweep": [f"kernel_sweep/bk{bk}_ok[bm=bn=128,bk={bk}]"
                          for bk in (8, 16, 32, 64, 128)],
         "fw_fused": (

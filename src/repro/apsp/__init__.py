@@ -10,8 +10,11 @@
 ``api.solve`` is the stateless entry point over the paper's implementation
 ladder (numpy / naive / blocked / staged / fused / distributed);
 ``engine.ApspEngine`` owns the plan/executable cache and ragged-batch
-bucketing for repeated solves; ``plan`` holds the shared block-size /
-padding / roofline / autotune arithmetic (batch-aware).
+bucketing for repeated solves (mesh-keyed for distributed meshes);
+``plan`` holds the shared block-size / padding / roofline / autotune /
+mesh arithmetic (batch-aware).  ``autotune_fw`` and ``distributed_plan``
+are re-exported from ``plan`` as the two planner entry points users reach
+for directly.
 """
 from repro.apsp import plan
 from repro.apsp.api import (
@@ -23,6 +26,7 @@ from repro.apsp.api import (
     solve,
 )
 from repro.apsp.engine import ApspEngine, EngineStats, ExecutablePlan, PlanKey
+from repro.apsp.plan import autotune_fw, distributed_plan
 
 __all__ = [
     "APSPResult",
@@ -33,6 +37,8 @@ __all__ = [
     "SUCCESSOR_METHODS",
     "NegativeCycleError",
     "PlanKey",
+    "autotune_fw",
+    "distributed_plan",
     "negative_cycle_mask",
     "plan",
     "solve",

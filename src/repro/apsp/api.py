@@ -109,16 +109,28 @@ def _resolve_method(method: str, n: int, successors: bool) -> str:
 
 
 def _resolve_shape(
-    method: str, n: int, successors: bool, block_size: int | None
+    method: str, n: int, successors: bool, block_size: int | None,
+    *, mesh=None, row_axes="data", col_axes="model",
 ) -> tuple[str, int | None, int]:
     """(method, block_size, n_padded) — THE dispatch-and-padding policy.
 
     Shared by the stateless ``solve`` and the engine's plan/bucket keys so
-    the two can never pad or dispatch differently for the same input
-    (``solve`` overrides the padded size for method="distributed", whose
-    multiple depends on the mesh).
+    the two can never pad or dispatch differently for the same input.  For
+    method="distributed" the padding multiple depends on the mesh grid, not
+    just the tile size: with a mesh it routes through
+    ``plan.distributed_plan`` (auto-padding to the mesh multiple); without
+    one it returns n unchanged and the caller raises.
     """
     meth = _resolve_method(method, n, successors)
+    if meth == "distributed" and mesh is not None:
+        from repro.core.distributed import _axis_size
+
+        R = _axis_size(mesh, row_axes)
+        C = _axis_size(mesh, col_axes)
+        dp = plan.distributed_plan(
+            n, R * C, grid=(R, C), block_size=block_size
+        )
+        return meth, dp["block_size"], dp["n_padded"]
     if meth in ("blocked", "staged", "fused"):
         s = block_size or plan.auto_block_size(n)
         return meth, s, plan.padded_size(n, s)
@@ -186,47 +198,54 @@ def solve(
     """All-pairs shortest paths (semiring closure) of one or many graphs.
 
     w: (n, n) adjacency matrix, or (B, n, n) for a batch of graphs; missing
-       edges are the semiring ⊕-identity (+inf for min-plus).  Any n — the
-       solver pads to the tile multiple and unpads the result.  Integer
-       matrices are promoted to float32 when the semiring identities are
-       non-finite (min-plus & friends) — ints cannot encode +inf.
+       edges are the semiring ⊕-identity (+inf for min-plus).  Any float
+       dtype the kernels support (float32/bfloat16 are the tested pair);
+       any n — the solver pads to the tile multiple and unpads the result.
+       Integer matrices are promoted to float32 when the semiring
+       identities are non-finite (min-plus & friends) — ints cannot encode
+       +inf.
     method: "auto" | "numpy" | "naive" | "blocked" | "staged" | "fused" |
-       "distributed" ("fused" pins the one-pallas_call-per-round kernel;
-       "staged" defaults to it too and falls back per fw_staged).
+       "distributed".  "fused" pins the one-pallas_call-per-round kernel
+       ("staged" defaults to it too and falls back per fw_staged);
+       "distributed" shards W over a device mesh and runs the fused
+       *bordered* round per device (``core.distributed``), auto-padding n
+       to the mesh multiple via ``plan.distributed_plan`` — batched
+       (B, n, n) input shards the trailing dims and is bitwise equal to B
+       single-device fused solves.
+    semiring: a ``core.semiring.Semiring`` or its name — "min_plus"
+       (shortest paths), "max_plus" (critical paths), "or_and" (transitive
+       closure on {0,1}), "max_min" (bottleneck paths), "plus_mul"
+       (ordinary algebra).  ⊕-identity encodes "no edge", ⊗-identity the
+       diagonal.
     successors: also return next-hop matrices (min-plus only; native in the
        fused/staged round kernel as well as the blocked/naive paths).
+       succ[..., i, j] = first hop of the shortest i→j path, -1 = no path
+       (int32).
     block_size: pivot-tile size for blocked/staged/distributed (None = auto).
     validate: raise ``NegativeCycleError`` on a negative diagonal (min-plus
        only; forces a host sync).
     mesh/row_axes/col_axes: device mesh for method="distributed".
     variant/interpret: staged-kernel lowering knobs (passed through).
+
+    Returns an ``APSPResult``: ``dist`` (same leading shape/dtype as the
+    input, unpadded), ``succ`` (int32 or None), plus the resolved method /
+    semiring / block_size / padded size for introspection.
     """
     sr = _resolve_semiring(semiring)
     arr = _coerce(w, sr)
     batched = arr.ndim == 3
     n = arr.shape[-1]
-    meth, s, m = _resolve_shape(method, n, successors, block_size)
+    meth, s, m = _resolve_shape(
+        method, n, successors, block_size,
+        mesh=mesh, row_axes=row_axes, col_axes=col_axes,
+    )
 
     if successors:
         _check_successor_args(meth, sr)
-    if meth == "distributed":
-        if batched:
-            raise ValueError("method='distributed' does not support batched input")
-        if mesh is None:
-            raise ValueError("method='distributed' requires a mesh")
+    if meth == "distributed" and mesh is None:
+        raise ValueError("method='distributed' requires a mesh")
     if meth == "numpy" and sr is not MIN_PLUS:
         raise ValueError("method='numpy' implements min_plus only")
-
-    if meth == "distributed":
-        # The padding multiple depends on the mesh factorization, not just
-        # the tile size — resolved here rather than in _resolve_shape.
-        from repro.core.distributed import _axis_size
-
-        s = block_size or plan.auto_block_size(n)
-        mult = plan.distributed_multiple(
-            s, _axis_size(mesh, row_axes), _axis_size(mesh, col_axes)
-        )
-        m = plan.padded_size(n, mult)
 
     # --- run ------------------------------------------------------------
     succ = None
@@ -274,12 +293,13 @@ def solve(
                     fused="ref" if use_ref
                     else (True if meth == "fused" else None),
                 )
-        else:  # distributed
+        else:  # distributed — the fused bordered round, one dispatch/device
             from repro.core.distributed import fw_distributed
 
             out = fw_distributed(
                 wp, mesh, block_size=s, row_axes=row_axes, col_axes=col_axes,
-                semiring=sr,
+                semiring=sr, variant=variant, interpret=interpret,
+                fused_lowering="auto" if interpret is None else "pallas",
             )
             dist = jnp.asarray(jax.device_get(out))
         dist = dist[..., :n, :n]

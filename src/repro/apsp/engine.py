@@ -24,6 +24,11 @@ sizes).  ``ApspEngine`` is the session object for that regime:
     successor round (``fw_staged_with_successors``) per bucket, the
     batched-routing-tables scenario ``serve.engine.RoutingEngine`` builds
     on.
+  * **meshes** — an engine constructed with ``mesh=`` and
+    method="distributed" caches shard-mapped batched executables instead
+    (the fused bordered round per device — ``core.distributed``); plan
+    keys carry the mesh signature, so ragged ``solve_many`` buckets shard
+    across devices with the same no-retrace guarantee.
 
 The engine is single-process state; it holds no device buffers beyond
 JAX's own executable cache.  Thread-safety is the caller's concern (the
@@ -58,7 +63,13 @@ from repro.core.staged import fw_staged, fw_staged_with_successors
 
 @dataclasses.dataclass(frozen=True)
 class PlanKey:
-    """The executable-cache key: everything that changes the compiled code."""
+    """The executable-cache key: everything that changes the compiled code.
+
+    ``mesh`` is the mesh signature for distributed entries — the
+    ((axis, size), …) grid plus the row/col axis split — so the same
+    engine can serve several meshes without executable collisions; None
+    for single-device methods.
+    """
 
     n_padded: int
     batch: int
@@ -69,6 +80,7 @@ class PlanKey:
     bk: int
     batch_block: int | None
     successors: bool
+    mesh: tuple | None = None
 
 
 @dataclasses.dataclass
@@ -121,13 +133,25 @@ class ApspEngine:
         validate: bool = True,
         interpret: bool | None = None,
         vmem_budget: int = 128 << 20,
+        mesh=None,
+        row_axes="data",
+        col_axes="model",
     ):
+        """method/semiring/block dims pin the solve configuration; per-call
+        shape/dtype/batch variation is absorbed by the plan cache.
+
+        mesh/row_axes/col_axes: a ``jax.sharding.Mesh`` enables
+        method="distributed" — every cached executable is then a
+        shard-mapped batched solve over that mesh (plan keys carry the mesh
+        signature), and ``solve_many`` buckets shard across devices without
+        retracing.  Distributed solves do not track successors.
+        """
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; have {METHODS}")
-        if method == "distributed":
+        if method == "distributed" and mesh is None:
             raise ValueError(
-                "ApspEngine does not drive the distributed backend; use "
-                "apsp.solve(method='distributed') directly"
+                "ApspEngine(method='distributed') requires a mesh= — "
+                "construct one (e.g. launch.mesh.make_host_mesh) and pass it"
             )
         self.method = method
         self.semiring = _resolve_semiring(semiring)
@@ -138,8 +162,19 @@ class ApspEngine:
         self.validate = validate
         self.interpret = interpret
         self.vmem_budget = vmem_budget
+        self.mesh = mesh
+        self.row_axes = row_axes
+        self.col_axes = col_axes
         self.stats = EngineStats()
         self._cache: dict[PlanKey, ExecutablePlan] = {}
+
+    @property
+    def _mesh_sig(self) -> tuple | None:
+        if self.mesh is None:
+            return None
+        row = self.row_axes if isinstance(self.row_axes, str) else tuple(self.row_axes)
+        col = self.col_axes if isinstance(self.col_axes, str) else tuple(self.col_axes)
+        return (tuple(self.mesh.shape.items()), row, col)
 
     # ------------------------------------------------------------- planning
     def clear_cache(self) -> None:
@@ -153,7 +188,10 @@ class ApspEngine:
         """(method, block_size, n_padded) for an n-vertex graph — delegates
         to api._resolve_shape, the ONE dispatch-and-padding policy, so the
         bucket key, the plan key, and stateless ``solve`` can never drift."""
-        return _resolve_shape(self.method, n, successors, self.block_size)
+        return _resolve_shape(
+            self.method, n, successors, self.block_size,
+            mesh=self.mesh, row_axes=self.row_axes, col_axes=self.col_axes,
+        )
 
     def plan_for(
         self,
@@ -171,6 +209,7 @@ class ApspEngine:
             raise ValueError("method='numpy' implements min_plus only")
         bb = None
         bk = self.bk
+        dist_plan = None
         if s is not None:
             bk = min(bk, s)
             if meth in ("staged", "fused"):
@@ -179,21 +218,37 @@ class ApspEngine:
                     word=jnp.dtype(dtype).itemsize,
                     vmem_budget=self.vmem_budget, successors=successors,
                 )
+            elif meth == "distributed":
+                from repro.core.distributed import _axis_size
+
+                R = _axis_size(self.mesh, self.row_axes)
+                C = _axis_size(self.mesh, self.col_axes)
+                # Planned ONCE here; _build consumes the same dict, so the
+                # key's batch_block and the executable's VMEM model cannot
+                # diverge.
+                dist_plan = plan.distributed_plan(
+                    m, R * C, grid=(R, C), block_size=s, batch=batch,
+                    bk=bk, variant=self.variant,
+                    word=jnp.dtype(dtype).itemsize,
+                    vmem_budget=self.vmem_budget,
+                )
+                bb = self.batch_block or dist_plan["batch_block"]
         key = PlanKey(
             n_padded=m, batch=batch, dtype=str(jnp.dtype(dtype)),
             semiring=self.semiring.name, method=meth, block_size=s, bk=bk,
             batch_block=bb, successors=successors,
+            mesh=self._mesh_sig if meth == "distributed" else None,
         )
         entry = self._cache.get(key)
         if entry is not None:
             self.stats.hits += 1
             return entry
         self.stats.misses += 1
-        entry = self._build(key)
+        entry = self._build(key, dist_plan=dist_plan)
         self._cache[key] = entry
         return entry
 
-    def _build(self, key: PlanKey) -> ExecutablePlan:
+    def _build(self, key: PlanKey, dist_plan: dict | None = None) -> ExecutablePlan:
         """Construct the jitted batched runner for a cache key."""
         sr = self.semiring
         s, bk, bb = key.block_size, key.bk, key.batch_block
@@ -204,6 +259,36 @@ class ApspEngine:
                 return np.stack([fw_numpy(g) for g in np.asarray(wp)])
 
             return ExecutablePlan(key=key, runner=runner)
+
+        if key.method == "distributed":
+            # One shard-mapped batched solve over the engine's mesh: every
+            # device runs the fused bordered round on its local tile set,
+            # all rounds inside one jitted call.  The executable is keyed on
+            # the mesh signature, so repeated (n, B, dtype) solves on the
+            # same mesh never retrace.
+            from repro.core.distributed import build_fw_shard_fn
+
+            rounds = key.n_padded // s
+            sharded, sharding = build_fw_shard_fn(
+                self.mesh, key.n_padded, block_size=s,
+                row_axes=self.row_axes, col_axes=self.col_axes,
+                semiring=sr, backend="fused", bk=bk, variant=self.variant,
+                batch_block=key.batch_block,  # resolved under OUR vmem budget
+                fused_lowering="auto" if interpret is None else "pallas",
+                interpret=interpret, batched=True,
+            )
+            entry = ExecutablePlan(
+                key=key, runner=None,
+                vmem_bytes=dist_plan["vmem_bytes"] if dist_plan else None,
+            )
+
+            def traced(wl):
+                entry.traces += 1
+                return sharded(wl, jnp.int32(0), jnp.int32(rounds))
+
+            jitted = jax.jit(traced)
+            entry.runner = lambda wp: jitted(jax.device_put(wp, sharding))
+            return entry
 
         if key.method == "naive":
             if key.successors:

@@ -63,6 +63,137 @@ def summa_comm_bound_bytes(n: int, R: int, C: int, word: int = 4) -> float:
     return n * n * (1.0 / R + 1.0 / C) * word
 
 
+def dist_round_comm_bytes(
+    n: int, R: int, C: int, s: int, *, word: int = 4, batch: int = 1
+) -> float:
+    """Comm bytes per device for ONE distributed round (what we implement).
+
+    Three ⊕-broadcasts per round: the raw (s,s) pivot tile across the whole
+    mesh plus the raw (s, n/C) row- and (n/R, s) column-panel slices along
+    their mesh axes.  Summed over the n/s rounds this exceeds the SUMMA
+    bound (``summa_comm_bound_bytes``) by exactly the redundant diagonal
+    term — the model side of the measured-vs-model comm-efficiency number
+    ``benchmarks.run`` records (the measured side comes from the collective
+    ops in the compiled HLO; see launch/fw_dist_check --bench).
+    """
+    return batch * (s * s + s * (n // C) + (n // R) * s) * word
+
+
+def bordered_round_vmem_bytes(
+    rows: int, cols: int, s: int, bk: int, *, word: int = 4,
+    variant: str = "fori", batch: int = 1,
+) -> int:
+    """VMEM per grid step of the bordered (distributed) fused round.
+
+    Same shape as ``fused_round_vmem_bytes`` on a rectangular (rows, cols)
+    bordered local matrix: the two closed border bands in persistent scratch
+    (s·cols + rows·s words) plus the double-buffered (s,s) in/out tiles,
+    times the batch block.
+    """
+    bands = s * cols + rows * s
+    tiles = 2 * 2 * s * s
+    transient = s * bk * s if variant == "broadcast" else 0
+    return batch * (bands + tiles + transient) * word
+
+
+def auto_bordered_batch_block(
+    B: int, rows: int, cols: int, s: int, bk: int, *, word: int = 4,
+    variant: str = "fori", vmem_budget: int = 128 << 20,
+) -> int:
+    """Largest divisor of B whose bordered scratch bands fit VMEM — the one
+    fitting loop shared by ``distributed_plan`` and the kernel wrapper."""
+    for bb in range(B, 0, -1):
+        if B % bb:
+            continue
+        if bordered_round_vmem_bytes(
+            rows, cols, s, bk, word=word, variant=variant, batch=bb
+        ) <= vmem_budget:
+            return bb
+    return 1
+
+
+def distributed_plan(
+    n: int,
+    devices: int,
+    *,
+    grid: tuple[int, int] | None = None,
+    batch: int = 1,
+    block_size: int | None = None,
+    pods: int = 1,
+    word: int = 4,
+    bk: int = 32,
+    variant: str = "fori",
+    vmem_budget: int = 128 << 20,
+) -> dict:
+    """THE mesh-aware plan for a distributed solve — (R, C, s) + padding.
+
+    Picks the (R, C) grid via ``mesh_factorization`` (``grid=(R, C)`` pins
+    an existing mesh's factorization instead — what ``solve`` passes for a
+    user-supplied mesh), the pivot width via ``auto_block_size``
+    (overridable), and *auto-pads* n to the ``distributed_multiple``
+    instead of raising on the n % (R·s) == 0 constraint — ``solve(method="distributed")``, ``ApspEngine`` and
+    ``launch.fw_dist_check`` all plan through here so the padded shape, the
+    per-device tile, and the comm model can never drift apart.
+
+    Returns a dict with: ``R``/``C`` (mesh grid), ``block_size``,
+    ``n_padded``, ``rounds``, ``tile`` ((n_r, n_c) local block),
+    ``bordered`` (per-device bordered-matrix shape), ``batch_block`` (graphs
+    per grid step of the bordered kernel), ``vmem_bytes`` (bordered-round
+    scratch model), ``comm_bytes_per_round`` (implemented broadcasts, per
+    device), ``summa_bound_bytes`` (the lower bound over the whole solve)
+    and ``comm_model_efficiency`` (bound / implemented ≤ 1).
+    """
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if grid is not None:
+        R, C = grid
+        if R * C != devices:
+            raise ValueError(f"grid {grid} does not cover {devices} devices")
+    else:
+        R, C = mesh_factorization(devices, pods)
+    if block_size is None:
+        # The padding multiple is s·lcm(R, C), so auto_block_size's own
+        # <33% waste bound no longer holds at its preferred tile; walk the
+        # tile down until the *mesh* padding respects the same bound (the
+        # fattest such tile wins), falling back to the least-padding
+        # candidate when even s=16 cannot (tiny n on a wide mesh).
+        cands = []
+        s = auto_block_size(n)
+        while s >= 16:
+            cands.append((s, padded_size(n, distributed_multiple(s, R, C))))
+            s //= 2
+        fitting = [(sc, mc) for sc, mc in cands if 3 * (mc - n) <= n]
+        s, m = fitting[0] if fitting else min(
+            cands, key=lambda t: (t[1], -t[0])
+        )
+    else:
+        s = block_size
+        m = padded_size(n, distributed_multiple(s, R, C))
+    n_r, n_c = m // R, m // C
+    rounds = m // s
+    rows, cols = n_r + s, n_c + s
+    bb = auto_bordered_batch_block(
+        batch, rows, cols, s, bk, word=word, variant=variant,
+        vmem_budget=vmem_budget,
+    )
+    # Both sides of the efficiency ratio scale with the batch (every round
+    # broadcasts (B,·,·) slices; the SUMMA bound is per graph).
+    per_round = dist_round_comm_bytes(m, R, C, s, word=word, batch=batch)
+    bound = batch * summa_comm_bound_bytes(m, R, C, word)
+    return dict(
+        R=R, C=C, block_size=s, n=n, n_padded=m, rounds=rounds,
+        tile=(n_r, n_c), bordered=(rows, cols), batch=batch, batch_block=bb,
+        vmem_bytes=bordered_round_vmem_bytes(
+            rows, cols, s, bk, word=word, variant=variant, batch=bb
+        ),
+        comm_bytes_per_round=per_round,
+        summa_bound_bytes=bound,
+        comm_model_efficiency=bound / (rounds * per_round),
+    )
+
+
 def phase3_vmem_bytes(
     bm: int, bn: int, bk: int, *, word: int = 4, fused: bool = False
 ) -> int:

@@ -6,19 +6,39 @@ al.):
 
   * W (n,n) is block-distributed: rows over the mesh row axes (``pod`` ×
     ``data``), columns over the mesh column axis (``model``); each device
-    holds an (n/R, n/C) block.
+    holds an (n/R, n/C) block.  Batched (B, n, n) inputs shard the trailing
+    two dims the same way (every device holds B local blocks).
   * Per round b (pivot block of width s):
       1. the raw diagonal tile is broadcast with a masked ``pmin`` (owner
          contributes its tile, everyone else +inf — the ⊕-identity makes
-         the reduction a broadcast in log(P) hops) and every device closes
-         it redundantly (phase 1, O(s³) — negligible);
+         the reduction a broadcast in log(P) hops);
       2. the raw pivot row/column panel slices are pmin-broadcast along the
-         row/column mesh axes and every device closes its own (s, n/C) /
-         (n/R, s) slice (phase 2);
-      3. every device relaxes its local block against the two panels
-         (phase 3 — the paper's staged kernel, running per device).
+         row/column mesh axes;
+      3. every device closes the broadcast pivot tile and panel slices and
+         relaxes its local block against them.
   * Comm per device per round: s² + s·n/C + s·n/R words; over n/s rounds
-    → n²(1/R + 1/C) — the SUMMA bound.
+    → n²(1/R + 1/C) — the SUMMA bound (``plan.summa_comm_bound_bytes``;
+    the implemented volume is ``plan.dist_round_comm_bytes``, and
+    ``launch.fw_dist_check --bench`` checks both against the collectives in
+    the compiled HLO).
+
+Step 3 has three lowerings, picked by ``backend``:
+
+  * ``"fused"`` (default) — the raw pivot tile and panel slices are stacked
+    as a *border* onto the local block and the whole round (phases 1-3)
+    runs as ONE ``pallas_call`` per device: ``kernels.fw_round_bordered``,
+    the paper's single-dispatch multi-stage round on the rectangular
+    bordered tile grid (on CPU its bitwise XLA lowering
+    ``kernels.ref.fw_round_bordered_ref`` executes instead).  Owner-echo
+    coordinates splice the closed border over the device's own copies of
+    the global pivot bands, which makes the distributed solve *bitwise*
+    equal to the single-device fused solve for every semiring
+    (tests/test_distributed.py).
+  * ``"jnp"`` — the original per-phase jnp lowering (close diag, close
+    panels, chunked phase-3 relaxation) — the counting backend
+    ``launch.fw_dryrun`` lowers for cost analysis.
+  * ``"pallas"`` — per-phase lowering with the phase-3 relaxation on the
+    staged ``semiring_matmul`` kernel.
 
 Relaxing the pivot bands again during phase 3 is a no-op for idempotent ⊕
 (they are already closed under k ∈ block), which keeps every device's
@@ -71,6 +91,7 @@ def _my_index(axes: Sequence[str] | str) -> jax.Array:
 # The version shim lives in utils.compat now (the MoE a2a layer shares it);
 # the old private name stays importable for existing callers.
 from repro.utils.compat import shard_map as _shard_map  # noqa: E402
+from repro.kernels.ref import _dyn_slice, _dyn_update  # noqa: E402
 
 
 _UNROLL_INNER = False  # counting mode: python-loop the k iterations so
@@ -87,28 +108,34 @@ def _loop(n, body, init):
 
 
 def _phase1(diag, semiring):
-    s = diag.shape[0]
+    s = diag.shape[-1]
 
     def body(k, t):
-        return semiring.add(t, semiring.mul(t[:, k, None], t[k, None, :]))
+        return semiring.add(
+            t, semiring.mul(t[..., :, k, None], t[..., k, None, :])
+        )
 
     return _loop(s, body, diag)
 
 
 def _phase2_row(diag, panel, semiring):
-    s = diag.shape[0]
+    s = diag.shape[-1]
 
     def body(k, p):
-        return semiring.add(p, semiring.mul(diag[:, k, None], p[k, None, :]))
+        return semiring.add(
+            p, semiring.mul(diag[..., :, k, None], p[..., k, None, :])
+        )
 
     return _loop(s, body, panel)
 
 
 def _phase2_col(diag, panel, semiring):
-    s = diag.shape[0]
+    s = diag.shape[-1]
 
     def body(k, p):
-        return semiring.add(p, semiring.mul(p[:, k, None], diag[k, None, :]))
+        return semiring.add(
+            p, semiring.mul(p[..., :, k, None], diag[..., k, None, :])
+        )
 
     return _loop(s, body, panel)
 
@@ -117,23 +144,23 @@ def _phase3_jnp(w, col_panel, row_panel, semiring, chunk: int = 8):
     """Local W ⊕= col_panel ⊗ row_panel without an (n_r, s, n_c) blowup.
 
     Processes the contraction in k-chunks (the staged idea, in jnp): each
-    chunk materializes (n_r, chunk, n_c) — `chunk` controls the transient.
+    chunk materializes (…, n_r, chunk, n_c) — `chunk` controls the
+    transient.  Batch-rank-agnostic (ellipsis indexing).
     """
-    s = col_panel.shape[1]
+    s = col_panel.shape[-1]
+
+    def _outer(a, b):
+        return semiring.add_reduce(
+            semiring.mul(a[..., :, :, None], b[..., None, :, :]), axis=-2
+        )
 
     def body(i, w):
-        a = jax.lax.dynamic_slice(col_panel, (0, i * chunk), (w.shape[0], chunk))
-        b = jax.lax.dynamic_slice(row_panel, (i * chunk, 0), (chunk, w.shape[1]))
-        upd = semiring.add_reduce(semiring.mul(a[:, :, None], b[None, :, :]), axis=1)
-        return semiring.add(w, upd)
+        a = _dyn_slice(col_panel, 0, i * chunk, w.shape[-2], chunk)
+        b = _dyn_slice(row_panel, i * chunk, 0, chunk, w.shape[-1])
+        return semiring.add(w, _outer(a, b))
 
     if s % chunk:
-        return semiring.add(
-            w,
-            semiring.add_reduce(
-                semiring.mul(col_panel[:, :, None], row_panel[None, :, :]), axis=1
-            ),
-        )
+        return semiring.add(w, _outer(col_panel, row_panel))
     return _loop(s // chunk, body, w)
 
 
@@ -158,27 +185,47 @@ def build_fw_shard_fn(
     row_axes: Sequence[str] | str = "data",
     col_axes: Sequence[str] | str = "model",
     semiring: Semiring = MIN_PLUS,
-    backend: str = "jnp",
+    backend: str = "fused",
+    bk: int = 32,
+    variant: str = "fori",
+    batch_block: int | None = None,
     interpret: bool | None = None,
+    fused_lowering: str = "auto",
     lookahead: bool = False,
     phase2_shard: bool = False,
+    batched: bool = False,
 ):
     """Returns (sharded_step_fn, in_sharding) for `rounds_per_call` rounds.
 
-    sharded_step_fn(w, first_round) runs rounds [first_round,
-    first_round+rounds_per_call) — it is jit-compiled once and reused for
-    every chunk.  n, block_size, mesh shape are static.
+    sharded_step_fn(w, first_round, num_rounds) runs rounds [first_round,
+    first_round+num_rounds) — it is jit-compiled once and reused for every
+    chunk.  n, block_size, mesh shape are static; ``batched=True`` expects
+    (B, n, n) input (trailing dims sharded, every device holds B blocks).
 
-    phase2_shard (beyond-paper, §Perf): the panel closures are j-(resp. i-)
-    independent, so instead of every device redundantly closing its full
-    (s, n_c) panel slice, each device closes a 1/R (resp. 1/C) chunk and the
-    chunks are all-gathered.  Compute drops R×/C× for ~2× panel comm —
-    a clear win whenever the workload is compute-bound (the Pallas backend).
+    backend: "fused" — the whole round as one bordered ``fw_round``
+    dispatch per device (module docstring); "jnp"/"pallas" — the per-phase
+    lowerings.  ``fused_lowering`` picks the fused round's execution:
+    "pallas" (the kernel; interpret per ``interpret``), "ref" (its bitwise
+    XLA lowering) or "auto" (ref on CPU, pallas elsewhere — the same policy
+    as ``apsp.solve``).  ``bk``/``variant`` are the phase-3 staging knobs of
+    the fused round; with the defaults the distributed solve is bitwise
+    equal to the single-device ``solve(method="fused")``.
+
+    phase2_shard (beyond-paper, §Perf; per-phase backends only): the panel
+    closures are j-(resp. i-) independent, so instead of every device
+    redundantly closing its full (s, n_c) panel slice, each device closes a
+    1/R (resp. 1/C) chunk and the chunks are all-gathered.  Compute drops
+    R×/C× for ~2× panel comm — a clear win whenever the workload is
+    compute-bound (the Pallas backend).
     """
     if interpret is None:
         from repro.kernels.ops import default_interpret
 
         interpret = default_interpret()
+    if fused_lowering == "auto":
+        from repro.kernels.ops import default_interpret
+
+        fused_lowering = "ref" if default_interpret() else "pallas"
     R = _axis_size(mesh, row_axes)
     C = _axis_size(mesh, col_axes)
     s = block_size
@@ -186,12 +233,41 @@ def build_fw_shard_fn(
     if n % (R * s) or n % (C * s) or n_r % s or n_c % s:
         raise ValueError(
             f"n={n} must give per-device blocks divisible by block_size={s} "
-            f"on mesh R={R}, C={C}"
+            f"on mesh R={R}, C={C} — plan through apsp.plan.distributed_plan"
+            f" (or apsp.solve(method='distributed')), which auto-pads"
+        )
+    if phase2_shard and (backend == "fused" or batched):
+        raise ValueError(
+            "phase2_shard applies to the per-phase backends (jnp/pallas) on "
+            "unbatched input; the fused bordered round closes panels inside "
+            "the kernel"
         )
 
     row_t = (row_axes,) if isinstance(row_axes, str) else tuple(row_axes)
     col_t = (col_axes,) if isinstance(col_axes, str) else tuple(col_axes)
-    spec = P(row_t if len(row_t) > 1 else row_t[0], col_t if len(col_t) > 1 else col_t[0])
+    dims = (
+        row_t if len(row_t) > 1 else row_t[0],
+        col_t if len(col_t) > 1 else col_t[0],
+    )
+    spec = P(None, *dims) if batched else P(*dims)
+
+    if fused_lowering == "ref":
+        from repro.kernels.ref import fw_round_bordered_ref
+
+        def bordered_round(aug, pr, pc):
+            return fw_round_bordered_ref(
+                aug, pr, pc, block_size=s, bk=bk, variant=variant,
+                semiring=semiring,
+            )
+    else:
+        from repro.kernels.fw_round import fw_round_bordered
+
+        def bordered_round(aug, pr, pc):
+            return fw_round_bordered(
+                aug, pr, pc, block_size=s, bk=bk, variant=variant,
+                batch_block=batch_block, semiring=semiring,
+                interpret=interpret,
+            )
 
     def one_round(b, wl):
         o = b * s
@@ -203,20 +279,39 @@ def build_fw_shard_fn(
         col_in = o - owner_c * n_c
         zero = jnp.asarray(semiring.zero, wl.dtype)
 
-        # --- phase 1: masked-pmin broadcast of the raw diag, close locally.
-        diag_raw = jax.lax.dynamic_slice(wl, (row_in, col_in), (s, s))
+        # --- broadcast the raw pivot tile and panel slices (masked ⊕-
+        # reduce across the mesh == broadcast from the owner).
+        diag_raw = _dyn_slice(wl, row_in, col_in, s, s)
         is_owner = jnp.logical_and(my_r == owner_r, my_c == owner_c)
         diag_raw = jnp.where(is_owner, diag_raw, zero)
-        # ⊕-reduce across the whole mesh == broadcast from the owner.
         diag = _bcast(diag_raw, row_t + col_t, semiring)
-        diag = _phase1(diag, semiring)
 
-        # --- phase 2: broadcast raw panels; close redundantly everywhere,
-        # or close a 1/R (1/C) chunk each + all-gather (phase2_shard).
-        rp_raw = jax.lax.dynamic_slice(wl, (row_in, 0), (s, n_c))
+        rp_raw = _dyn_slice(wl, row_in, 0, s, n_c)
         rp_raw = jnp.where(my_r == owner_r, rp_raw, zero)
         rp_raw = _bcast(rp_raw, row_t, semiring)
-        if phase2_shard and n_c % R == 0:
+
+        cp_raw = _dyn_slice(wl, 0, col_in, n_r, s)
+        cp_raw = jnp.where(my_c == owner_c, cp_raw, zero)
+        cp_raw = _bcast(cp_raw, col_t, semiring)
+
+        if backend == "fused":
+            # --- the paper's single-dispatch round, per device: stack the
+            # raw pivot tile + panels as a border and run the whole round
+            # (phases 1-3) through the bordered fw_round schedule.  The
+            # owner-echo tile coordinates point at the device's own copies
+            # of the global pivot bands inside the bordered matrix.
+            aug = jnp.concatenate([
+                jnp.concatenate([diag, rp_raw], axis=-1),
+                jnp.concatenate([cp_raw, wl], axis=-1),
+            ], axis=-2)
+            pr = jnp.where(my_r == owner_r, 1 + row_in // s, -1)
+            pc = jnp.where(my_c == owner_c, 1 + col_in // s, -1)
+            aug = bordered_round(aug, pr, pc)
+            return aug[..., s:, s:]
+
+        # --- per-phase lowerings: close diag + panels, then relax.
+        diag = _phase1(diag, semiring)
+        if phase2_shard and n_c % R == 0 and not batched:
             wch = n_c // R
             chunk = jax.lax.dynamic_slice(rp_raw, (0, my_r * wch), (s, wch))
             chunk = _phase2_row(diag, chunk, semiring)
@@ -224,10 +319,7 @@ def build_fw_shard_fn(
         else:
             rp = _phase2_row(diag, rp_raw, semiring)
 
-        cp_raw = jax.lax.dynamic_slice(wl, (0, col_in), (n_r, s))
-        cp_raw = jnp.where(my_c == owner_c, cp_raw, zero)
-        cp_raw = _bcast(cp_raw, col_t, semiring)
-        if phase2_shard and n_r % C == 0:
+        if phase2_shard and n_r % C == 0 and not batched:
             hch = n_r // C
             chunk = jax.lax.dynamic_slice(cp_raw, (my_c * hch, 0), (hch, s))
             chunk = _phase2_col(diag, chunk, semiring)
@@ -236,9 +328,9 @@ def build_fw_shard_fn(
             cp = _phase2_col(diag, cp_raw, semiring)
 
         # --- write panels back on owners (select keeps SPMD uniform).
-        wl_rows = jax.lax.dynamic_update_slice(wl, rp, (row_in, 0))
+        wl_rows = _dyn_update(wl, rp, row_in, 0)
         wl = jnp.where(my_r == owner_r, wl_rows, wl)
-        wl_cols = jax.lax.dynamic_update_slice(wl, cp, (0, col_in))
+        wl_cols = _dyn_update(wl, cp, 0, col_in)
         wl = jnp.where(my_c == owner_c, wl_cols, wl)
 
         # --- phase 3: relax the whole local block (pivot bands → no-op).
@@ -280,7 +372,12 @@ def fw_distributed(
     row_axes: Sequence[str] | str = "data",
     col_axes: Sequence[str] | str = "model",
     semiring: Semiring = MIN_PLUS,
-    backend: str = "jnp",
+    backend: str = "fused",
+    bk: int = 32,
+    variant: str = "fori",
+    batch_block: int | None = None,
+    interpret: bool | None = None,
+    fused_lowering: str = "auto",
     rounds_per_call: int | None = None,
     checkpoint_cb: Callable[[int, jax.Array], None] | None = None,
     start_round: int = 0,
@@ -288,17 +385,32 @@ def fw_distributed(
 ) -> jax.Array:
     """Run distributed FW to completion; returns the (sharded) result.
 
+    w: (n, n) adjacency matrix — or (B, n, n) to close B graphs at once
+    (trailing dims sharded over the mesh; one collective per round carries
+    the whole batch).  n must satisfy the mesh-divisibility constraint;
+    ``apsp.solve(method="distributed")`` auto-pads arbitrary n via
+    ``plan.distributed_plan`` before calling in here.
+
+    backend: "fused" (default — one bordered ``fw_round`` dispatch per
+    device per round) | "jnp" | "pallas" (per-phase lowerings).
+
     checkpoint_cb(next_round, w) is called after every jitted chunk —
-    restart by passing ``start_round`` = the last checkpointed round.
+    restart by passing ``start_round`` = the last checkpointed round.  Any
+    round boundary is a consistent checkpoint and re-running a round is
+    harmless (module docstring, Fault tolerance).
     """
-    n = w.shape[0]
+    batched = w.ndim == 3
+    n = w.shape[-1]
     s = block_size
     rounds = n // s
     if rounds_per_call is None:
         rounds_per_call = rounds
     sharded, sharding = build_fw_shard_fn(
         mesh, n, block_size=s, row_axes=row_axes, col_axes=col_axes,
-        semiring=semiring, backend=backend, phase2_shard=phase2_shard,
+        semiring=semiring, backend=backend, bk=bk, variant=variant,
+        batch_block=batch_block, interpret=interpret,
+        fused_lowering=fused_lowering, phase2_shard=phase2_shard,
+        batched=batched,
     )
     step = jax.jit(sharded, static_argnames=(), donate_argnums=(0,))
     wl = jax.device_put(jnp.asarray(w), sharding)

@@ -165,6 +165,45 @@ def extract_path(succ: np.ndarray, src: int, dst: int, max_len: int | None = Non
     return path
 
 
+def extract_path_from_dist(
+    w: np.ndarray, dist: np.ndarray, src: int, dst: int,
+    *, max_len: int | None = None,
+) -> list[int]:
+    """Reconstruct a shortest path from the distance matrix alone (host).
+
+    For serving paths when no successor table exists (the distributed
+    refresh returns distances only): from u, the next hop is the neighbor v
+    minimizing w[u, v] + dist[v, dst] — by Bellman optimality that sum
+    equals dist[u, dst] on a shortest path.  O(path length · n) numpy; the
+    argmin (rather than an exact-equality test) tolerates the float
+    re-association between the closure's reduction order and this sum.
+    Returns [] when dst is unreachable or no path materializes within
+    ``max_len`` hops.
+    """
+    w = np.asarray(w)
+    dist = np.asarray(dist)
+    if not np.isfinite(dist[src, dst]):
+        return []
+    path = [src]
+    cur = src
+    visited = np.zeros(dist.shape[0], dtype=bool)
+    visited[src] = True
+    limit = max_len or dist.shape[0] + 1
+    while cur != dst and len(path) <= limit:
+        cand = w[cur, :] + dist[:, dst]
+        # A shortest path never needs to revisit a vertex; masking visited
+        # ones keeps zero-weight cycles (and self-loops) from trapping the
+        # greedy walk in an A↔B oscillation.
+        cand[visited] = np.inf
+        nxt = int(np.argmin(cand))
+        if not np.isfinite(cand[nxt]):
+            return []
+        path.append(nxt)
+        visited[nxt] = True
+        cur = nxt
+    return path if cur == dst else []
+
+
 def path_cost(w: np.ndarray, path: list[int]) -> float:
     """Sum of edge weights along ``path`` in the original adjacency matrix."""
     w = np.asarray(w)

@@ -62,6 +62,28 @@ VMEM: scratch is ``bb·2·s·n`` words + the double-buffered (bb,s,s) in/out
 tiles — ``plan.fused_round_vmem_bytes(batch=bb)``; successor tracking
 doubles it.  ``plan.auto_batch_block`` picks the largest batch block that
 fits the budget.
+
+``fw_round_bordered`` is the distributed form of the same kernel: each
+device of an R×C mesh holds an (n_r, n_c) block of W, and per round the raw
+pivot tile and panel slices are ⊕-broadcast and stacked as a *border* onto
+the local block::
+
+        [ diag  row_panel ]      (s + n_r, s + n_c), pivot at tile (0, 0)
+        [ col_  local     ]
+        [ panel block     ]
+
+One bordered round is then exactly this kernel's schedule on a rectangular
+tile grid with the pivot pinned at (0,0): phase 1 closes the (s,s) corner,
+phase 2 closes the border bands through the same scratch, phase 3 relaxes
+every local tile against them — the paper's single-dispatch round, per
+device, per round.  Two *owner-echo* scalars (``owner_row``/``owner_col``,
+the bordered tile coordinates where the device's local block holds its own
+copy of the global pivot bands, -1 elsewhere) splice the closed border
+values over those copies, exactly as the square kernel splices its closed
+bands — so the distributed solve is bitwise equal to the single-device
+fused solve for every semiring, including non-idempotent ⊕ (plus_mul),
+where a re-relaxed band would otherwise double-count
+(tests/test_distributed.py).  See docs/KERNELS.md §Distributed round.
 """
 from __future__ import annotations
 
@@ -98,15 +120,50 @@ def _round_order(b: jax.Array, T: int) -> tuple[jax.Array, jax.Array]:
     return oi, oj
 
 
+def _bordered_order(tr: int, tc: int) -> tuple[jax.Array, jax.Array]:
+    """Static tile-visit order for a bordered round (pivot at tile (0,0)).
+
+    g=0 → corner (0,0); g ∈ [1, tc) → border-row tiles (0, j); g ∈
+    [tc, tc+tr-1) → border-col tiles (i, 0); then phase 3 over all tr·tc
+    tiles row-major.  tr·tc + tr + tc - 1 steps — the square ``_round_order``
+    with b=0, generalized to a rectangular tile grid.
+    """
+    ri = jnp.arange(1, tr, dtype=jnp.int32)
+    ci = jnp.arange(1, tc, dtype=jnp.int32)
+    zero = jnp.zeros((1,), jnp.int32)
+    oi = jnp.concatenate(
+        [zero, jnp.zeros((tc - 1,), jnp.int32), ri,
+         jnp.repeat(jnp.arange(tr, dtype=jnp.int32), tc)]
+    )
+    oj = jnp.concatenate(
+        [zero, ci, jnp.zeros((tr - 1,), jnp.int32),
+         jnp.tile(jnp.arange(tc, dtype=jnp.int32), tr)]
+    )
+    return oi, oj
+
+
 def _round_kernel(
-    oi_ref, oj_ref, w_ref, o_ref, row_ref, col_ref,
-    *, T: int, s: int, bk: int, semiring: Semiring, variant: Variant,
-    step_axis: int = 0,
+    oi_ref, oj_ref, own_ref, w_ref, o_ref, row_ref, col_ref,
+    *, tr: int, tc: int, s: int, bk: int, semiring: Semiring,
+    variant: Variant, step_axis: int = 0,
 ):
+    """One multi-stage round on a (tr, tc) tile grid.
+
+    Square single-device rounds run it with tr == tc and the pivot-first
+    order arrays; the distributed bordered round runs it rectangular with
+    the pivot pinned at tile (0,0).  ``own_ref`` holds the two owner-echo
+    tile coordinates (pr, pc): where the local block carries its own copy of
+    the global pivot bands (bordered rounds on owner devices), the closed
+    scratch values are spliced over those copies so non-idempotent ⊕ never
+    re-relaxes an already-closed band.  (-1, -1) — the square case — makes
+    every echo a no-op.
+    """
     g = pl.program_id(step_axis)
     i = oi_ref[g]
     j = oj_ref[g]
     b = oi_ref[0]  # the pivot index (step 0 visits the pivot tile)
+    pr = own_ref[0]
+    pc = own_ref[1]
     # Batched refs carry a leading batch-block dim; `lead` makes every
     # scratch index batch-rank-agnostic (compute uses ellipsis indexing).
     lead = (slice(None),) if w_ref.ndim == 3 else ()
@@ -126,7 +183,7 @@ def _round_kernel(
         pl.store(row_ref, lead + (slice(None), pl.dslice(j * s, s)), t)
         pl.store(col_ref, lead + (pl.dslice(i * s, s), slice(None)), t)
 
-    @pl.when((g >= 1) & (g < T))
+    @pl.when((g >= 1) & (g < tc))
     def _phase2_row():
         d = pl.load(row_ref, lead + (slice(None), pl.dslice(b * s, s)))
 
@@ -136,10 +193,14 @@ def _round_kernel(
             )
 
         p = jax.lax.fori_loop(0, s, body, w_ref[...])
+        # Owner echo: the tile at border column pc is the device's broadcast
+        # copy of the raw diagonal — its closed value is the phase-1 closure,
+        # not the phase-2 recurrence (they differ for non-idempotent ⊕).
+        p = jnp.where(j == pc, d, p)
         o_ref[...] = p
         pl.store(row_ref, lead + (slice(None), pl.dslice(j * s, s)), p)
 
-    @pl.when((g >= T) & (g < 2 * T - 1))
+    @pl.when((g >= tc) & (g < tc + tr - 1))
     def _phase2_col():
         d = pl.load(row_ref, lead + (slice(None), pl.dslice(b * s, s)))
 
@@ -149,16 +210,21 @@ def _round_kernel(
             )
 
         p = jax.lax.fori_loop(0, s, body, w_ref[...])
+        p = jnp.where(i == pr, d, p)
         o_ref[...] = p
         pl.store(col_ref, lead + (pl.dslice(i * s, s), slice(None)), p)
 
-    @pl.when(g >= 2 * T - 1)
+    @pl.when(g >= tc + tr - 1)
     def _phase3():
         a = pl.load(col_ref, lead + (pl.dslice(i * s, s), slice(None)))
         bb = pl.load(row_ref, lead + (slice(None), pl.dslice(j * s, s)))
         # Accumulator input: pivot-band tiles were rewritten this round, so
-        # their current value lives in scratch (== a/bb), not in w_ref.
-        c = jnp.where(i == b, bb, jnp.where(j == b, a, w_ref[...]))
+        # their current value lives in scratch (== a/bb), not in w_ref; the
+        # owner-echo rows/cols are a device's local copies of the same bands.
+        c = jnp.where(
+            (i == b) | (i == pr), bb,
+            jnp.where((j == b) | (j == pc), a, w_ref[...]),
+        )
         for k0 in range(0, s, bk):
             c = _stage_compute(
                 c, a[..., :, k0:k0 + bk], bb[..., k0:k0 + bk, :],
@@ -282,13 +348,20 @@ def _resolve_batch_block(B: int, n: int, s: int, batch_block: int | None,
     )
 
 
-def _batch_grid_spec(pltpu, B, bb, n, s, T, scratch, extra_in=0):
+def _batch_grid_spec(pltpu, B, bb, s, steps, scratch, extra_in=0,
+                     num_prefetch=3):
     """PrefetchScalarGridSpec for the batched round: leading batch grid dim,
-    (bb,s,s) tiles, per-graph scratch bands."""
-    spec = pl.BlockSpec((bb, s, s), lambda bi, g, oi, oj: (bi, oi[g], oj[g]))
+    (bb,s,s) tiles, per-graph scratch bands.  ``num_prefetch`` is 3 for the
+    plain round (order arrays + owner-echo scalars) and 2 for the successor
+    round (order arrays only)."""
+    if num_prefetch == 3:
+        idx = lambda bi, g, oi, oj, own: (bi, oi[g], oj[g])
+    else:
+        idx = lambda bi, g, oi, oj: (bi, oi[g], oj[g])
+    spec = pl.BlockSpec((bb, s, s), idx)
     return pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(B // bb, T * T + 2 * T - 1),
+        num_scalar_prefetch=num_prefetch,
+        grid=(B // bb, steps),
         in_specs=[spec] * (1 + extra_in),
         out_specs=[spec] * (1 + extra_in) if extra_in else spec,
         scratch_shapes=scratch,
@@ -341,6 +414,7 @@ def fw_round(
     T = n // s
     bk = _fit_block(s, bk)
     oi, oj = _round_order(b, T)
+    own = jnp.full((2,), -1, jnp.int32)  # no owner echo in the square round
     word = jnp.dtype(w.dtype).itemsize
     if batched:
         B = w.shape[0]
@@ -348,17 +422,18 @@ def fw_round(
             B, n, s, batch_block, word=word, bk=bk, variant=variant
         )
         grid_spec = _batch_grid_spec(
-            pltpu, B, bb, n, s, T,
+            pltpu, B, bb, s, T * T + 2 * T - 1,
             [pltpu.VMEM((bb, s, n), w.dtype),  # closed row bands, per graph
              pltpu.VMEM((bb, n, s), w.dtype)],  # closed col bands, per graph
         )
         step_axis, semantics = 1, ("arbitrary", "arbitrary")
     else:
+        spec = pl.BlockSpec((s, s), lambda g, oi, oj, own: (oi[g], oj[g]))
         grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(T * T + 2 * T - 1,),
-            in_specs=[pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g]))],
-            out_specs=pl.BlockSpec((s, s), lambda g, oi, oj: (oi[g], oj[g])),
+            in_specs=[spec],
+            out_specs=spec,
             scratch_shapes=[
                 pltpu.VMEM((s, n), w.dtype),  # closed row band (diag at col b)
                 pltpu.VMEM((n, s), w.dtype),  # closed col band (diag at row b)
@@ -366,8 +441,8 @@ def fw_round(
         )
         step_axis, semantics = 0, ("arbitrary",)
     kern = functools.partial(
-        _round_kernel, T=T, s=s, bk=bk, semiring=semiring, variant=variant,
-        step_axis=step_axis,
+        _round_kernel, tr=T, tc=T, s=s, bk=bk, semiring=semiring,
+        variant=variant, step_axis=step_axis,
     )
     return pl.pallas_call(
         kern,
@@ -377,7 +452,127 @@ def fw_round(
         compiler_params=compat.tpu_compiler_params(
             dimension_semantics=semantics
         ),
-    )(oi, oj, w)
+    )(oi, oj, own, w)
+
+
+def _resolve_bordered_batch_block(
+    B: int, rows: int, cols: int, s: int, batch_block: int | None,
+    *, word: int, bk: int = 32, variant: str = "fori",
+    vmem_budget: int = 128 << 20,
+) -> int:
+    """Largest divisor of B whose bordered scratch bands fit VMEM."""
+    if batch_block is not None:
+        if B % batch_block:
+            raise ValueError(
+                f"batch_block={batch_block} must divide the batch size {B}"
+            )
+        return batch_block
+    from repro.apsp import plan  # call-time import: apsp imports this module
+
+    return plan.auto_bordered_batch_block(
+        B, rows, cols, s, bk, word=word, variant=variant,
+        vmem_budget=vmem_budget,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "bk", "batch_block", "variant", "semiring",
+                     "interpret"),
+)
+def fw_round_bordered(
+    w: jax.Array,
+    owner_row: jax.Array | int = -1,
+    owner_col: jax.Array | int = -1,
+    *,
+    block_size: int = 128,
+    bk: int = 32,
+    batch_block: int | None = None,
+    variant: Variant = "fori",
+    semiring: Semiring = MIN_PLUS,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """One fused *bordered* round: the distributed per-device dispatch.
+
+    w: (rows, cols) or (B, rows, cols) pivot-bordered local matrix — the
+    broadcast raw (s,s) pivot tile in the top-left corner, the raw pivot
+    row/column panel slices as the first block-row/-column, the device's
+    local W block as the remainder; rows % block_size == cols % block_size
+    == 0.  Phases 1-3 of the round run in ONE ``pallas_call`` on the
+    rectangular tile grid (pivot pinned at tile (0,0)); the returned matrix
+    carries the closed border and the fully relaxed local block (callers
+    slice ``[..., s:, s:]``).
+
+    owner_row / owner_col: bordered *tile* coordinates at which the local
+    block holds the device's own copy of the global pivot row/column band
+    (-1 when it does not) — may be traced; they feed the owner-echo splice
+    that keeps the solve bitwise equal to the single-device kernel for
+    non-idempotent ⊕.  Both scalars are shared across a batch (ownership is
+    a device property, not a graph property).
+    """
+    if interpret is None:
+        from repro.kernels.ops import default_interpret
+
+        interpret = default_interpret()
+    batched = w.ndim == 3
+    rows, cols = w.shape[-2:]
+    s = block_size
+    if w.ndim not in (2, 3) or rows % s or cols % s:
+        raise ValueError(
+            f"w must be (rows,cols) or (B,rows,cols) with both dims a "
+            f"multiple of {s}, got {w.shape}"
+        )
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except Exception as e:  # pragma: no cover - pallas TPU module absent
+        raise NotImplementedError(
+            "fw_round_bordered needs pallas TPU scratch + scalar prefetch"
+        ) from e
+    tr, tc = rows // s, cols // s
+    bk = _fit_block(s, bk)
+    oi, oj = _bordered_order(tr, tc)
+    own = jnp.stack([
+        jnp.asarray(owner_row, jnp.int32), jnp.asarray(owner_col, jnp.int32)
+    ])
+    steps = tr * tc + tr + tc - 1
+    word = jnp.dtype(w.dtype).itemsize
+    if batched:
+        B = w.shape[0]
+        bb = _resolve_bordered_batch_block(
+            B, rows, cols, s, batch_block, word=word, bk=bk, variant=variant
+        )
+        grid_spec = _batch_grid_spec(
+            pltpu, B, bb, s, steps,
+            [pltpu.VMEM((bb, s, cols), w.dtype),  # closed border row band
+             pltpu.VMEM((bb, rows, s), w.dtype)],  # closed border col band
+        )
+        step_axis, semantics = 1, ("arbitrary", "arbitrary")
+    else:
+        spec = pl.BlockSpec((s, s), lambda g, oi, oj, own: (oi[g], oj[g]))
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(steps,),
+            in_specs=[spec],
+            out_specs=spec,
+            scratch_shapes=[
+                pltpu.VMEM((s, cols), w.dtype),  # closed border row band
+                pltpu.VMEM((rows, s), w.dtype),  # closed border col band
+            ],
+        )
+        step_axis, semantics = 0, ("arbitrary",)
+    kern = functools.partial(
+        _round_kernel, tr=tr, tc=tc, s=s, bk=bk, semiring=semiring,
+        variant=variant, step_axis=step_axis,
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=interpret,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=semantics
+        ),
+    )(oi, oj, own, w)
 
 
 @functools.partial(
@@ -430,12 +625,13 @@ def fw_round_with_successors(
         B = w.shape[0]
         bb = _resolve_batch_block(B, n, s, batch_block, word=word)
         grid_spec = _batch_grid_spec(
-            pltpu, B, bb, n, s, T,
+            pltpu, B, bb, s, T * T + 2 * T - 1,
             [pltpu.VMEM((bb, s, n), w.dtype),
              pltpu.VMEM((bb, n, s), w.dtype),
              pltpu.VMEM((bb, s, n), succ.dtype),
              pltpu.VMEM((bb, n, s), succ.dtype)],
             extra_in=1,
+            num_prefetch=2,
         )
         step_axis, semantics = 1, ("arbitrary", "arbitrary")
     else:

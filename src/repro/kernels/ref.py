@@ -161,6 +161,79 @@ def fw_round_ref(
     return w
 
 
+def fw_round_bordered_ref(
+    w: jax.Array,
+    owner_row: jax.Array | int = -1,
+    owner_col: jax.Array | int = -1,
+    *,
+    block_size: int,
+    bk: int = 32,
+    variant: str = "fori",
+    semiring: Semiring = MIN_PLUS,
+) -> jax.Array:
+    """XLA lowering of one bordered round — bitwise ``fw_round_bordered``.
+
+    w: (…, rows, cols) pivot-bordered local matrix (raw pivot tile in the
+    top-left (s,s) corner, raw panel slices as the first block-row/-col,
+    the local W block as the rest); both dims % block_size == 0.  Phase 1
+    closes the corner, phase 2 closes the border bands, phase 3 relaxes
+    everything through the same ``_stage_compute`` bk-chunk sequence as the
+    Pallas kernel.  ``owner_row``/``owner_col`` (bordered tile coordinates,
+    may be traced, -1 = absent) splice the closed border over the device's
+    local copies of the global pivot bands — the kernel's owner echo — so
+    the distributed solve stays bitwise for non-idempotent ⊕ too.
+    """
+    from repro.kernels.minplus_matmul import _fit_block, _stage_compute
+
+    rows, cols = w.shape[-2:]
+    s = block_size
+    bk = _fit_block(s, bk)
+    pr = jnp.asarray(owner_row, jnp.int32)
+    pc = jnp.asarray(owner_col, jnp.int32)
+
+    diag = w[..., :s, :s]
+
+    def p1(k, t):
+        return semiring.add(t, semiring.mul(t[..., :, k, None], t[..., k, None, :]))
+
+    diag = jax.lax.fori_loop(0, s, p1, diag)
+
+    row = w[..., :s, :]
+
+    def p2r(k, p):
+        return semiring.add(p, semiring.mul(diag[..., :, k, None], p[..., k, None, :]))
+
+    row = jax.lax.fori_loop(0, s, p2r, row)
+    row = _dyn_update(row, diag, 0, 0)
+    # Owner echo: the border tile at column pc is the broadcast copy of the
+    # raw diagonal; its closed value is the phase-1 closure.  A negative pc
+    # clamps harmlessly — the jnp.where discards the spliced branch.
+    row = jnp.where(pc >= 0, _dyn_update(row, diag, 0, pc * s), row)
+
+    col = w[..., :, :s]
+
+    def p2c(k, p):
+        return semiring.add(p, semiring.mul(p[..., :, k, None], diag[..., k, None, :]))
+
+    col = jax.lax.fori_loop(0, s, p2c, col)
+    col = _dyn_update(col, diag, 0, 0)
+    col = jnp.where(pr >= 0, _dyn_update(col, diag, pr * s, 0), col)
+
+    # Phase 3 accumulator: the border takes its closed values, and the
+    # owner-echo rows/cols (local copies of the global pivot bands) take the
+    # same closed band values — exactly the kernel's scratch reads.
+    w = _dyn_update(w, row, 0, 0)
+    w = _dyn_update(w, col, 0, 0)
+    w = jnp.where(pr >= 0, _dyn_update(w, row, pr * s, 0), w)
+    w = jnp.where(pc >= 0, _dyn_update(w, col, 0, pc * s), w)
+    for k0 in range(0, s, bk):
+        w = _stage_compute(
+            w, col[..., :, k0:k0 + bk], row[..., k0:k0 + bk, :],
+            semiring, variant,
+        )
+    return w
+
+
 def fw_round_with_successors_ref(
     w: jax.Array,
     succ: jax.Array,

@@ -1,12 +1,67 @@
-"""Multi-device distributed-FW correctness check (run in a subprocess).
+"""Multi-device distributed-FW check + bench probe (run in a subprocess).
 
 Usage: python -m repro.launch.fw_dist_check [--devices 8] [--n 256] [--bs 32]
+
 Sets XLA_FLAGS *before* importing jax, builds a small host-device mesh, and
-verifies fw_distributed == fw_naive.  Exit code 0 on success.
+verifies the distributed solve.  Exit code 0 on success.  Modes:
+
+  (default)        fw_distributed == fw_naive (allclose) — the legacy check.
+  --bitwise        distributed == the single-device fused solve, BITWISE —
+                   exercised per --semiring and --dtype (the owner-echo
+                   guarantee of kernels.fw_round_bordered).
+  --method solve   route through apsp.solve(method="distributed") — also
+                   exercises the auto-padding of plan.distributed_plan for
+                   non-divisible n (e.g. --n 96).
+  --method engine  route a ragged batch through ApspEngine(mesh=...).
+                   solve_many + assert the warm cache retraces nothing.
+  --bench          time the per-round dispatch and measure the collective
+                   bytes in the compiled per-round HLO against the SUMMA
+                   model (plan.dist_round_comm_bytes /
+                   plan.summa_comm_bound_bytes); prints a ``METRICS {json}``
+                   line benchmarks.run parses into BENCH_fw.json.
+
+tests/test_distributed.py drives the bitwise matrix (5 semirings × 2
+dtypes); .github/workflows/ci.yml runs the 8-virtual-device smoke.
 """
 import argparse
+import json
 import os
 import sys
+import time
+
+
+def collective_bytes(hlo: str) -> float:
+    """Sum the per-device collective operand bytes in an HLO dump.
+
+    The "measured" side of the comm-efficiency number: what the compiled
+    program actually moves per call, vs what the SUMMA model says it
+    should.  Delegates to ``launch.roofline.parse_collective_bytes`` (the
+    one HLO collective parser in the repo — operand-based, so async
+    -start/-done pairs count once).
+    """
+    from repro.launch import roofline
+
+    return sum(roofline.parse_collective_bytes(hlo).values())
+
+
+def _graph_for(semiring: str, n: int, seed: int = 0):
+    """Per-semiring test input: ⊗ must not overflow under closure."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    if semiring == "plus_mul":
+        # Non-idempotent ⊕ sums products over every path; tiny weights with
+        # no unit self-loops keep the closure finite (a 1.0 diagonal makes
+        # path counts — and the values — blow up to inf within a few
+        # rounds), so bitwise comparisons compare numbers, not inf/NaN.
+        return rng.uniform(1e-3, 1e-2, (n, n)).astype(np.float32)
+    if semiring == "or_and":
+        w = (rng.uniform(0, 1, (n, n)) < 0.05).astype(np.float32)
+        np.fill_diagonal(w, 1.0)
+        return w
+    from repro.core.graph import random_digraph
+
+    return random_digraph(n, density=0.3, seed=seed)
 
 
 def main() -> int:
@@ -14,8 +69,20 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--bs", type=int, default=32)
-    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--backend", default="fused",
+                    choices=["fused", "jnp", "pallas"])
     ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--semiring", default="min_plus")
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--method", default="direct",
+                    choices=["direct", "solve", "engine"])
+    ap.add_argument("--batch", type=int, default=1,
+                    help="solve mode: close B graphs through one sharded batch")
+    ap.add_argument("--bitwise", action="store_true",
+                    help="compare against the single-device fused solve, bitwise")
+    ap.add_argument("--bench", action="store_true",
+                    help="emit METRICS json (per-round ms + comm bytes)")
     ap.add_argument("--chunked", action="store_true", help="exercise checkpoint chunking")
     ap.add_argument("--phase2-shard", action="store_true")
     args = ap.parse_args()
@@ -28,9 +95,10 @@ def main() -> int:
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.apsp import ApspEngine, plan, solve
     from repro.core import fw_naive
-    from repro.core.distributed import fw_distributed
-    from repro.core.graph import random_digraph
+    from repro.core.distributed import build_fw_shard_fn, fw_distributed
+    from repro.core.semiring import SEMIRINGS
     from repro.launch.mesh import make_host_mesh
 
     ndev = len(jax.devices())
@@ -39,26 +107,150 @@ def main() -> int:
     # (R, C) grid benchmarks use to derive the SUMMA comm bound.
     mesh = make_host_mesh(args.devices, pods=args.pods)
     row_axes = ("pod", "data") if args.pods > 1 else "data"
+    sr = SEMIRINGS[args.semiring]
+    dtype = jnp.dtype(args.dtype)
+    R, C = plan.mesh_factorization(args.devices, args.pods)
 
-    w = random_digraph(args.n, density=0.3, seed=0)
-    want = np.asarray(fw_naive(jnp.asarray(w)))
+    w = jnp.asarray(_graph_for(args.semiring, args.n, seed=0), dtype)
+    if args.batch > 1:
+        # (--bitwise too: the naive oracle of the default mode is not
+        # batch-aware, so the only meaningful batched check is the bitwise
+        # diff against the batched single-device fused solve.)
+        assert args.method == "solve" and args.bitwise, \
+            "--batch needs --method solve --bitwise"
+        w = jnp.stack([
+            jnp.asarray(_graph_for(args.semiring, args.n, seed=i), dtype)
+            for i in range(args.batch)
+        ])
 
-    ckpts = []
-    cb = (lambda b, wl: ckpts.append(b)) if args.chunked else None
-    got = fw_distributed(
-        w, mesh, block_size=args.bs, row_axes=row_axes, col_axes="model",
-        backend=args.backend,
-        rounds_per_call=2 if args.chunked else None,
-        checkpoint_cb=cb,
-        phase2_shard=args.phase2_shard,
+    if args.bench:
+        dp = plan.distributed_plan(args.n, args.devices, grid=(R, C),
+                                   block_size=args.bs, pods=args.pods,
+                                   word=dtype.itemsize)
+        s, m = dp["block_size"], dp["n_padded"]
+        from repro.apsp.api import _pad
+
+        wp = _pad(w, m, sr)
+        sharded, sharding = build_fw_shard_fn(
+            mesh, m, block_size=s, row_axes=row_axes, col_axes="model",
+            semiring=sr, backend=args.backend,
+        )
+        step = jax.jit(sharded)
+        wl = jax.device_put(wp, sharding)
+        # One AOT compile serves both the HLO dump and the timed calls (a
+        # plain step() afterwards would recompile — the jit dispatch cache
+        # is not populated by lower().compile()).
+        compiled = step.lower(wl, jnp.int32(0), jnp.int32(1)).compile()
+        measured = collective_bytes(compiled.as_text())
+        rounds = dp["rounds"]
+        out = compiled(wl, jnp.int32(0), jnp.int32(1))  # warm
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        cur = wl
+        for b in range(rounds):
+            cur = compiled(cur, jnp.int32(b), jnp.int32(1))
+        jax.block_until_ready(cur)
+        round_ms = (time.perf_counter() - t0) / rounds * 1e3
+        # Whole solve measured as ONE jitted all-rounds call (what
+        # fw_distributed/ApspEngine actually dispatch) — not rounds ×
+        # round_ms, which would double-count per-call overhead.
+        full = step.lower(wl, jnp.int32(0), jnp.int32(rounds)).compile()
+        jax.block_until_ready(full(wl, jnp.int32(0), jnp.int32(rounds)))
+        t0 = time.perf_counter()
+        jax.block_until_ready(full(wl, jnp.int32(0), jnp.int32(rounds)))
+        solve_ms = (time.perf_counter() - t0) * 1e3
+        bound_round = dp["summa_bound_bytes"] / rounds
+        metrics = dict(
+            ndev=ndev, R=R, C=C, n=args.n, n_padded=m, bs=s,
+            backend=args.backend, rounds=rounds, round_ms=round_ms,
+            solve_ms=solve_ms,
+            comm_measured_bytes=measured,
+            comm_model_bytes=dp["comm_bytes_per_round"],
+            summa_bound_bytes_per_round=bound_round,
+            comm_efficiency_measured=(bound_round / measured) if measured else None,
+            comm_efficiency_model=dp["comm_model_efficiency"],
+        )
+        print("METRICS " + json.dumps(metrics))
+        print(f"OK bench ndev={ndev} n={args.n} bs={s} backend={args.backend}")
+        return 0
+
+    if args.method == "engine":
+        # Ragged batch through the mesh-keyed plan cache; every graph must
+        # bit-match its single-device fused solve, and a second pass must
+        # hit the warm cache without retracing.
+        eng = ApspEngine(method="distributed", mesh=mesh, row_axes=row_axes,
+                         semiring=sr, block_size=args.bs, validate=False)
+        sizes = [args.n, max(args.n // 2, 2 * args.bs), args.n]
+        graphs = [
+            jnp.asarray(_graph_for(args.semiring, nn, seed=i), dtype)
+            for i, nn in enumerate(sizes)
+        ]
+        results = eng.solve_many(graphs)
+        for g, r in zip(graphs, results):
+            single = solve(g, method="fused", block_size=r.block_size,
+                           semiring=sr, validate=False)
+            ok = np.array_equal(np.asarray(r.dist), np.asarray(single.dist),
+                                equal_nan=True)
+            assert ok, f"engine dist != single fused at n={g.shape[-1]}"
+        eng.solve_many(graphs)
+        traces = [e.traces for e in eng._cache.values()]
+        assert all(t == 1 for t in traces), f"warm cache retraced: {traces}"
+        print(f"OK engine devices={ndev} mesh={dict(mesh.shape)} "
+              f"sizes={sizes} semiring={args.semiring} dtype={args.dtype} "
+              f"cache={eng.cache_size} hits={eng.stats.hits}")
+        return 0
+
+    if args.method == "solve":
+        res = solve(w, method="distributed", mesh=mesh, row_axes=row_axes,
+                    semiring=sr, block_size=args.bs, validate=False)
+        got = np.asarray(res.dist)
+        s_used, m = res.block_size, res.padded_n
+    else:  # direct fw_distributed (requires mesh-divisible n)
+        ckpts = []
+        cb = (lambda b, wl: ckpts.append(b)) if args.chunked else None
+        out = fw_distributed(
+            w, mesh, block_size=args.bs, row_axes=row_axes, col_axes="model",
+            semiring=sr, backend=args.backend,
+            rounds_per_call=2 if args.chunked else None,
+            checkpoint_cb=cb,
+            phase2_shard=args.phase2_shard,
+        )
+        got = np.asarray(jax.device_get(out))
+        s_used, m = args.bs, args.n
+        if args.chunked:
+            assert ckpts and ckpts[-1] == args.n // args.bs, ckpts
+
+    if args.bitwise:
+        single = solve(w, method="fused", block_size=s_used, semiring=sr,
+                       validate=False)
+        want = np.asarray(single.dist)
+        if args.method == "direct":
+            want = np.asarray(_pad_like(want, m, sr, jnp))
+        if not np.array_equal(got, want, equal_nan=True):
+            bad = np.flatnonzero(got != want)
+            print(f"FAIL bitwise: {bad.size} mismatching elements", file=sys.stderr)
+            return 1
+        print(f"OK bitwise devices={ndev} mesh={dict(mesh.shape)} n={args.n} "
+              f"bs={s_used} method={args.method} backend={args.backend} "
+              f"semiring={args.semiring} dtype={args.dtype} padded={m}")
+        return 0
+
+    want = np.asarray(fw_naive(w, semiring=sr))
+    np.testing.assert_allclose(
+        got[: args.n, : args.n], want, rtol=2e-5, atol=2e-5
     )
-    got = np.asarray(jax.device_get(got))
-    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
-    if args.chunked:
-        assert ckpts and ckpts[-1] == args.n // args.bs, ckpts
     print(f"OK devices={ndev} mesh={dict(mesh.shape)} n={args.n} bs={args.bs} "
-          f"backend={args.backend} p2shard={args.phase2_shard} chunks={len(ckpts)}")
+          f"backend={args.backend} p2shard={args.phase2_shard} "
+          f"chunks={len(ckpts) if args.chunked else 0}")
     return 0
+
+
+def _pad_like(want, m, sr, jnp):
+    """Pad the single-device oracle to the distributed padded size for a
+    direct-mode bitwise diff (solve-mode results are already unpadded)."""
+    from repro.apsp.api import _pad
+
+    return _pad(jnp.asarray(want), m, sr)
 
 
 if __name__ == "__main__":

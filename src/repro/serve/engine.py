@@ -211,10 +211,14 @@ class RouteReply:
 
 @dataclasses.dataclass
 class _RoutingTable:
-    """Solved state for one registered graph: distances + next hops."""
+    """Solved state for one registered graph: distances + next hops.
+
+    succ is None when the refresh ran distance-only (distributed meshes);
+    queries then reconstruct hops from dist + the adjacency matrix.
+    """
 
     dist: np.ndarray
-    succ: np.ndarray
+    succ: np.ndarray | None
     version: int
 
 
@@ -234,6 +238,13 @@ class RoutingEngine:
     with successor tracking.  Queries never touch the device: they walk the
     cached successor matrix on the host (O(path length)).  ``query`` on a
     stale graph raises unless ``auto_refresh`` (the default) is on.
+
+    ``mesh=`` shards the refresh across a device mesh: the engine runs
+    method="distributed" (the fused bordered round per device — graphs too
+    big for one device, or many graphs amortizing the collective), the
+    refresh caches *distances only* (the distributed round does not track
+    successors), and queries reconstruct hops host-side from dist + the
+    adjacency matrix (``core.paths.extract_path_from_dist``, O(path·n)).
     """
 
     def __init__(
@@ -244,12 +255,29 @@ class RoutingEngine:
         block_size: int | None = None,
         interpret: bool | None = None,
         auto_refresh: bool = True,
+        mesh=None,
+        row_axes="data",
+        col_axes="model",
     ):
+        """engine: a pre-built ApspEngine (overrides every other knob).
+        method/block_size/interpret: forwarded to the owned ApspEngine.
+        mesh/row_axes/col_axes: serve over a device mesh (see class doc).
+        auto_refresh: stale graphs re-solve on first read instead of
+        raising."""
         from repro.apsp import ApspEngine
 
-        self.engine = engine or ApspEngine(
-            method=method, block_size=block_size, interpret=interpret,
-        )
+        if engine is None:
+            if mesh is not None:
+                engine = ApspEngine(
+                    method="distributed", block_size=block_size,
+                    interpret=interpret, mesh=mesh,
+                    row_axes=row_axes, col_axes=col_axes,
+                )
+            else:
+                engine = ApspEngine(
+                    method=method, block_size=block_size, interpret=interpret,
+                )
+        self.engine = engine
         self.auto_refresh = auto_refresh
         self._graphs: dict[str, np.ndarray] = {}
         self._tables: dict[str, _RoutingTable] = {}
@@ -308,15 +336,19 @@ class RoutingEngine:
         if not self._dirty:
             return 0
         ids = list(self._dirty)
+        # Distributed refreshes are distance-only (no successor tracking in
+        # the bordered round); queries fall back to dist-based hop walks.
+        use_succ = self.engine.method != "distributed"
         results = self.engine.solve_many(
-            [self._graphs[g] for g in ids], successors=True
+            [self._graphs[g] for g in ids], successors=use_succ
         )
         self._version += 1
         for gid, res in zip(ids, results):
-            dist, succ = np.asarray(res.dist), np.asarray(res.succ)
+            dist = np.asarray(res.dist)
+            succ = np.asarray(res.succ) if res.succ is not None else None
             # Read-only: distances()/query() hand these out; a caller must
             # not be able to corrupt the cache in place.
-            for a in (dist, succ):
+            for a in (dist,) if succ is None else (dist, succ):
                 a.flags.writeable = False
             self._tables[gid] = _RoutingTable(
                 dist=dist, succ=succ, version=self._version,
@@ -339,11 +371,21 @@ class RoutingEngine:
         return self._tables[graph_id]
 
     def query(self, graph_id: str, src: int, dst: int) -> RouteReply:
-        """Shortest path + cost from the cached routing table."""
-        from repro.core.paths import extract_path
+        """Shortest path + cost from the cached routing table.
+
+        src/dst: vertex indices into the registered graph.  Successor
+        tables give an O(path length) walk; distance-only tables (mesh
+        serving) reconstruct each hop from dist + adjacency instead.
+        """
+        from repro.core.paths import extract_path, extract_path_from_dist
 
         table = self._fresh_table(graph_id)
-        path = extract_path(table.succ, src, dst)
+        if table.succ is not None:
+            path = extract_path(table.succ, src, dst)
+        else:
+            path = extract_path_from_dist(
+                self._graphs[graph_id], table.dist, src, dst
+            )
         cost = float(table.dist[src, dst])
         return RouteReply(
             graph_id=graph_id, src=src, dst=dst, path=path, cost=cost
