@@ -7,8 +7,9 @@ trajectory is machine-trackable across PRs.
   fw_table1        — the paper's Table 1 implementation ladder
   fw_scaling       — the paper's Figure 7 growth curve (time vs n³ fit)
   fw_batched       — batched solve() ladder (many small graphs at once):
-                     sequential loop vs vmap-wrapped vs the fused round's
-                     native batch grid vs a warm ApspEngine cache
+                     sequential loop vs natively batched blocked FW vs the
+                     fused round's native batch grid vs a warm ApspEngine
+                     cache
   fw_dist          — distributed FW ladder (subprocess, 8 host devices):
                      per-round ms for the fused bordered round vs the
                      per-phase lowering, whole-solve wall, and the
@@ -18,8 +19,11 @@ trajectory is machine-trackable across PRs.
                      correctness + VMEM-footprint arithmetic; see
                      EXPERIMENTS.md §Perf for the roofline-side analysis)
   fw_fused         — the fused one-dispatch-per-round kernel at the Table-1
-                     sizes, plus the plan.autotune_fw measured sweep over
+                     sizes (+ achieved-bandwidth and int16/bf16 dtype rows),
+                     plus the plan.autotune_fw measured sweep over
                      (block_size, bm, bn, bk) round configs
+  fw_packed        — bit-packed or_and transitive closure (32 graphs per
+                     int32 lane) vs unpacked f32 or_and at n=1024
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...]
      PYTHONPATH=src python -m benchmarks.run --smoke
@@ -81,15 +85,22 @@ def bench_fw_batched():
 
     Four rungs of the same workload (B=16 routing-sized graphs):
 
-      sequential  — B separate solve() calls (the pre-batching serving loop)
-      vmap        — one vmap-ed blocked FW wrapped AROUND the round loop
-      fused       — the round kernel's native batch grid: the batch dim
-                    lives INSIDE the kernel schedule (one dispatch per round
-                    for all B graphs); block 25 divides n=100 → zero
-                    padding, variant="unroll" (the paper's loop unrolling)
-      engine_warm — the same through a warm ApspEngine plan/executable
-                    cache (the serving steady state: no re-plan, no
-                    re-trace)
+      sequential     — B separate solve() calls (the pre-batching serving
+                       loop)
+      blocked_native — ONE batched blocked solve: fw_blocked's round loop
+                       runs all B graphs with a leading batch dim (replaced
+                       the old vmap-around-the-loop rung; the vmap wrapper
+                       batched every dynamic slice individually and its
+                       "regression" vs sequential was within CPU timing
+                       noise — EXPERIMENTS.md §Batched)
+      fused          — the round kernel's native batch grid: the batch dim
+                       lives INSIDE the kernel schedule (one dispatch per
+                       round for all B graphs); block 25 divides n=100 →
+                       zero padding, variant="unroll" (the paper's loop
+                       unrolling)
+      engine_warm    — the same through a warm ApspEngine plan/executable
+                       cache (the serving steady state: no re-plan, no
+                       re-trace)
 
     The acceptance bar for the batched engine: fused ≥ 2× over sequential.
     """
@@ -114,10 +125,10 @@ def bench_fw_batched():
                      validate=False)
     eng.solve(wb)  # plan + compile once; the steady state is all cache hits
     t_eng = fw_table1._time(lambda: eng.solve(wb).dist)
-    rows.append(("fw_batched/vmap", f"B={b},n={n}", t_batch * 1e6,
+    rows.append(("fw_batched/blocked_native", f"B={b},n={n}", t_batch * 1e6,
                  f"{b*n**3/t_batch/1e9:.2f}Gtasks/s"))
     rows.append(("fw_batched/sequential", f"B={b},n={n}", t_seq * 1e6,
-                 f"speedup={t_seq/t_batch:.1f}x_vs_vmap"))
+                 f"speedup={t_seq/t_batch:.1f}x_vs_blocked_native"))
     rows.append(("fw_batched/fused", f"B={b},n={n}", t_fused * 1e6,
                  f"speedup={t_seq/t_fused:.1f}x_vs_sequential"))
     rows.append(("fw_batched/engine_warm", f"B={b},n={n}", t_eng * 1e6,
@@ -217,6 +228,10 @@ def bench_kernel_sweep():
 
 FUSED_SIZES = (256, 512, 1024)
 SWEEP_N = 256
+# Narrow-dtype ladder: the bandwidth-lean lowerings at the small and large
+# Table-1 sizes (ISSUE 6 — bytes-per-round as a planning axis).
+DTYPE_SIZES = (256, 1024)
+DTYPES = ("int16", "bfloat16")
 
 
 def _sweep_cfgs():
@@ -233,24 +248,53 @@ def _cfg_key(c) -> str:
 
 
 def bench_fw_fused():
-    """Fused round kernel: Table-1 sizes + the autotune sweep.
+    """Fused round kernel: Table-1 sizes + achieved bandwidth + the
+    narrow-dtype ladder + the autotune sweep.
 
     Wall-times are interpret-mode on CPU (XLA-compiled trace of the kernel,
     not Mosaic) — comparable across rungs here, but the TPU numbers are the
     ones the paper's 5× claim lives on.  Derived column: dispatches/round.
+
+    ``hbm_gbps`` rows turn "the round is bandwidth-bound" into a number:
+    modeled solve bytes (``plan.fused_solve_hbm_bytes``) over measured wall
+    time.  The dtype rows run the same fused solve through the int16
+    (saturating tropical) and bf16 storage lowerings — on hardware, half
+    the bytes per round; here the wall numbers track the CPU ref lowering.
     """
+    from repro.apsp import solve
     from repro.core.graph import random_digraph
     from repro.core.staged import fw_staged
 
     rows = []
     for n in FUSED_SIZES:
         w = random_digraph(n, density=1.0, seed=n)
+        s = min(128, n)
         # min over 2 reps at n=1024: the first warm interpret-mode call pays
         # one-off XLA CPU autotuning/paging (~2× the steady state).
+        reps = 2 if n >= 1024 else 3
         t = fw_table1._time(fw_table1._rung, "fused", w,
-                            block_size=min(128, n), reps=2 if n >= 1024 else 3)
+                            block_size=s, reps=reps)
         rows.append(("fw_fused/solve", f"n={n}", t * 1e6,
                      f"{n**3/t/1e9:.2f}Gtasks/s,1disp/round"))
+        rows.append(("fw_fused/hbm_gbps", f"n={n}",
+                     plan.achieved_hbm_gbps(n, s, t),
+                     f"model={plan.fused_solve_hbm_bytes(n, s)/1e6:.0f}"
+                     f"MB/solve,f32"))
+        if n in DTYPE_SIZES:
+            for dname in DTYPES:
+                dt = {"int16": jnp.int16, "bfloat16": jnp.bfloat16}[dname]
+                td = fw_table1._time(
+                    lambda w=w, s=s, dt=dt: solve(
+                        w, method="fused", block_size=s, dtype=dt,
+                        validate=False,
+                    ).dist,
+                    reps=reps,
+                )
+                rows.append((
+                    "fw_fused/solve", f"n={n},dtype={dname}", td * 1e6,
+                    f"{n**3/td/1e9:.2f}Gtasks/s,word="
+                    f"{plan.word_for(dname)}B",
+                ))
 
     # plan.autotune_fw measured sweep: both round lowerings, ranked.
     w = jnp.asarray(random_digraph(SWEEP_N, density=1.0, seed=SWEEP_N))
@@ -276,6 +320,52 @@ def bench_fw_fused():
     return rows
 
 
+PACKED_N, PACKED_B = 1024, 32
+
+
+def bench_fw_packed():
+    """Bit-packed or_and closure vs unpacked f32 or_and at n=1024.
+
+    The tentpole number of ISSUE 6: one packed int32 solve closes 32
+    independent reachability graphs in the SAME matrix footprint (and byte
+    traffic) an unpacked f32 solve spends on one.  Rows:
+
+      unpacked_f32      — one graph, or_and on {0,1} f32 (the old mode)
+      packed_i32        — 32 graphs via solve(packed=True): pack → one
+                          bitwise fused closure → unpack, timed end-to-end
+      per_graph_speedup — unpacked time / (packed time / 32); the
+                          acceptance bar is ≥8×, the byte model says ~32×
+                          minus pack/unpack overhead
+    """
+    from repro.apsp import solve
+
+    rows = []
+    rng = np.random.default_rng(7)
+    # Sparse enough that the closure is non-trivial, dense enough that the
+    # giant component spans — representative transitive-closure work.
+    g1 = (rng.uniform(size=(PACKED_N, PACKED_N)) < 0.005).astype(np.float32)
+    gb = (rng.uniform(size=(PACKED_B, PACKED_N, PACKED_N)) < 0.005).astype(
+        np.float32
+    )
+    t_un = fw_table1._time(
+        lambda: solve(g1, method="fused", block_size=128, semiring="or_and",
+                      validate=False).dist, reps=2,
+    )
+    t_pk = fw_table1._time(
+        lambda: solve(gb, method="fused", block_size=128, semiring="or_and",
+                      packed=True, validate=False).dist, reps=2,
+    )
+    speedup = t_un / (t_pk / PACKED_B)
+    rows.append(("fw_packed/unpacked_f32", f"B=1,n={PACKED_N}", t_un * 1e6,
+                 f"{PACKED_N**3/t_un/1e9:.2f}Gtasks/s"))
+    rows.append(("fw_packed/packed_i32", f"B={PACKED_B},n={PACKED_N}",
+                 t_pk * 1e6,
+                 f"{PACKED_B*PACKED_N**3/t_pk/1e9:.2f}Gtasks/s,32lanes/word"))
+    rows.append(("fw_packed/per_graph_speedup", f"n={PACKED_N}", speedup,
+                 f"target>=8x,packed_per_graph={t_pk/PACKED_B*1e6:.0f}us"))
+    return rows
+
+
 TABLES = {
     "fw_table1": bench_fw_table1,
     "fw_scaling": bench_fw_scaling,
@@ -283,6 +373,7 @@ TABLES = {
     "fw_dist": bench_fw_dist,
     "kernel_sweep": bench_kernel_sweep,
     "fw_fused": bench_fw_fused,
+    "fw_packed": bench_fw_packed,
 }
 
 
@@ -303,7 +394,7 @@ def expected_keys() -> dict[str, list[str]]:
             [f"fw_scaling/blocked[n={n}]" for n in (256, 512, 1024)]
             + ["fw_scaling/implied_constant[t=c*n^3,ps]"]
         ),
-        "fw_batched": ["fw_batched/vmap[B=16,n=100]",
+        "fw_batched": ["fw_batched/blocked_native[B=16,n=100]",
                        "fw_batched/sequential[B=16,n=100]",
                        "fw_batched/fused[B=16,n=100]",
                        "fw_batched/engine_warm[B=16,n=100]"],
@@ -316,8 +407,16 @@ def expected_keys() -> dict[str, list[str]]:
                          for bk in (8, 16, 32, 64, 128)],
         "fw_fused": (
             [f"fw_fused/solve[n={n}]" for n in FUSED_SIZES]
+            + [f"fw_fused/hbm_gbps[n={n}]" for n in FUSED_SIZES]
+            + [f"fw_fused/solve[n={n},dtype={d}]"
+               for n in DTYPE_SIZES for d in DTYPES]
             + [_cfg_key(c) for c in _sweep_cfgs()]
         ),
+        "fw_packed": [
+            f"fw_packed/unpacked_f32[B=1,n={PACKED_N}]",
+            f"fw_packed/packed_i32[B={PACKED_B},n={PACKED_N}]",
+            f"fw_packed/per_graph_speedup[n={PACKED_N}]",
+        ],
     }
 
 
@@ -348,6 +447,24 @@ def smoke() -> None:
             np.asarray(batched.dist[i]),
             np.asarray(fw_naive(jnp.asarray(wb[i]))), rtol=1e-5, atol=1e-5)
     print("smoke: batched fused == sequential per-graph solves (B=3, bitwise)")
+
+    # The fw_packed guard: pack → bitwise closure → unpack must reproduce
+    # per-graph unpacked or_and solves BITWISE, at a graph count that is not
+    # a multiple of 32 (exercises the empty pad lanes).
+    gs = np.stack([
+        (np.random.default_rng(i).uniform(size=(40, 40)) < 0.1)
+        .astype(np.float32) for i in range(5)
+    ])
+    pk = solve(gs, semiring="or_and", packed=True, method="fused",
+               block_size=20, validate=False)
+    for i in range(gs.shape[0]):
+        up = solve(gs[i], semiring="or_and", method="fused", block_size=20,
+                   validate=False)
+        if not np.array_equal(np.asarray(pk.dist[i]), np.asarray(up.dist)):
+            sys.exit(f"smoke: packed or_and closure diverges from the "
+                     f"unpacked per-graph solve on graph {i}")
+    print("smoke: packed or_and closure == unpacked per-graph solves "
+          "(B=5, bitwise)")
 
     if not os.path.exists(BENCH_JSON):
         sys.exit(f"smoke: {BENCH_JSON} missing — run the benchmarks first")

@@ -23,7 +23,9 @@ from repro.apsp.api import (
     APSPResult,
     NegativeCycleError,
     negative_cycle_mask,
+    pack_reachability,
     solve,
+    unpack_reachability,
 )
 from repro.apsp.engine import ApspEngine, EngineStats, ExecutablePlan, PlanKey
 from repro.apsp.plan import autotune_fw, distributed_plan
@@ -40,6 +42,8 @@ __all__ = [
     "autotune_fw",
     "distributed_plan",
     "negative_cycle_mask",
+    "pack_reachability",
     "plan",
     "solve",
+    "unpack_reachability",
 ]

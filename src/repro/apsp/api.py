@@ -36,7 +36,16 @@ import numpy as np
 from repro.apsp import plan
 from repro.core.floyd_warshall import fw_blocked, fw_naive, fw_numpy
 from repro.core.paths import fw_blocked_with_successors, fw_with_successors
-from repro.core.semiring import MIN_PLUS, SEMIRINGS, Semiring
+from repro.core.semiring import (
+    I16_INF,
+    I16_NINF,
+    LOWERED_SEMIRINGS,
+    MIN_PLUS,
+    PACK_LANES,
+    SEMIRINGS,
+    Semiring,
+    lower_semiring,
+)
 from repro.core.staged import fw_staged, fw_staged_with_successors
 from repro.kernels.ops import default_interpret as _default_interpret
 
@@ -84,13 +93,61 @@ def negative_cycle_mask(dist) -> jax.Array:
 
 def _resolve_semiring(semiring: Semiring | str) -> Semiring:
     if isinstance(semiring, str):
-        try:
-            return SEMIRINGS[semiring]
-        except KeyError:
+        sr = SEMIRINGS.get(semiring) or LOWERED_SEMIRINGS.get(semiring)
+        if sr is None:
             raise ValueError(
-                f"unknown semiring {semiring!r}; have {sorted(SEMIRINGS)}"
-            ) from None
+                f"unknown semiring {semiring!r}; have "
+                f"{sorted(SEMIRINGS) + sorted(LOWERED_SEMIRINGS)}"
+            )
+        return sr
     return semiring
+
+
+def _is_min_plus(sr: Semiring) -> bool:
+    """min_plus or one of its storage lowerings (negative-cycle semantics)."""
+    return sr is MIN_PLUS or sr.name.startswith("min_plus")
+
+
+def pack_reachability(w) -> jax.Array:
+    """Pack (B, n, n) or (n, n) boolean graphs into int32 bit planes.
+
+    Graph ``g`` lands in word ``g // 32``, bit ``g % 32`` (LSB-first):
+    ``out[g // 32, i, j] >> (g % 32) & 1`` is "edge i→j exists in graph g".
+    Any nonzero entry counts as an edge.  B is padded up to a multiple of 32
+    with empty graphs; output shape is (ceil(B/32), n, n) int32, ready for
+    ``solve(..., semiring="or_and_packed")``.
+    """
+    arr = jnp.asarray(w)
+    if arr.ndim == 2:
+        arr = arr[None]
+    if arr.ndim != 3 or arr.shape[-1] != arr.shape[-2]:
+        raise ValueError(f"w must be (n,n) or (B,n,n), got {arr.shape}")
+    B, n, _ = arr.shape
+    G = -(-B // PACK_LANES)
+    bits = (arr != 0).astype(jnp.uint32)
+    if G * PACK_LANES != B:
+        bits = jnp.pad(bits, ((0, G * PACK_LANES - B), (0, 0), (0, 0)))
+    shifts = jnp.arange(PACK_LANES, dtype=jnp.uint32)[None, :, None, None]
+    words = jnp.bitwise_or.reduce(
+        bits.reshape(G, PACK_LANES, n, n) << shifts, axis=1
+    )
+    return jax.lax.bitcast_convert_type(words, jnp.int32)
+
+
+def unpack_reachability(p, count: int | None = None, *, dtype=jnp.float32):
+    """Inverse of ``pack_reachability``: (G, n, n) int32 words → (count, n, n)
+    0/1 matrices of ``dtype`` (count defaults to all G·32 bit lanes)."""
+    arr = jnp.asarray(p)
+    if arr.ndim == 2:
+        arr = arr[None]
+    if arr.ndim != 3 or arr.shape[-1] != arr.shape[-2]:
+        raise ValueError(f"p must be (n,n) or (G,n,n), got {arr.shape}")
+    G, n, _ = arr.shape
+    words = jax.lax.bitcast_convert_type(arr, jnp.uint32)
+    shifts = jnp.arange(PACK_LANES, dtype=jnp.uint32)[None, :, None, None]
+    bits = (words[:, None, :, :] >> shifts) & jnp.uint32(1)
+    out = bits.reshape(G * PACK_LANES, n, n).astype(dtype)
+    return out if count is None else out[:count]
 
 
 def _resolve_method(method: str, n: int, successors: bool) -> str:
@@ -137,16 +194,44 @@ def _resolve_shape(
     return meth, None, n
 
 
-def _coerce(w, semiring: Semiring):
-    """np/jnp coercion + int→float promotion shared by solve and the engine.
+def _coerce(w, semiring: Semiring, dtype=None):
+    """np/jnp coercion + storage-dtype encoding shared by solve and the engine.
 
-    Integer matrices cannot represent the ±inf identities of the tropical
-    semirings: padding / missing edges would wrap on ⊗ (INT_MAX + w < 0)
-    and silently shorten paths.  Promote once, up front.
+    * Dtype-pinned lowerings encode up front: int16 tropical clips weights
+      into [I16_NINF, I16_INF] (so ±inf lands exactly on the sentinels and
+      out-of-range weights saturate, never wrap); the packed or_and lowering
+      requires pre-packed int32/uint32 bit-plane words (``pack_reachability``
+      or ``solve(packed=True)``).
+    * An explicit float ``dtype`` (bf16/f32/f64) is a plain cast — ±inf is
+      representable, so no re-encoding is needed.
+    * Otherwise, integer matrices cannot represent the ±inf identities of
+      the tropical semirings: padding / missing edges would wrap on ⊗
+      (INT_MAX + w < 0) and silently shorten paths.  Promote once, up front.
     """
     arr = np.asarray(w) if isinstance(w, (np.ndarray, list, tuple)) else w
     if arr.ndim not in (2, 3) or arr.shape[-1] != arr.shape[-2]:
         raise ValueError(f"w must be (n,n) or (B,n,n), got {arr.shape}")
+    if semiring.packed:
+        if not jnp.issubdtype(arr.dtype, jnp.integer):
+            raise ValueError(
+                f"semiring {semiring.name!r} takes int32 bit-plane words, "
+                f"got {arr.dtype}; pack boolean graphs with "
+                f"pack_reachability() or call solve(..., packed=True)"
+            )
+        if arr.dtype == np.uint32:
+            # Bit-pattern reinterpret, not a value cast (bit 31 is graph 31).
+            arr = (
+                arr.view(np.int32) if isinstance(arr, np.ndarray)
+                else jax.lax.bitcast_convert_type(arr, jnp.int32)
+            )
+        elif arr.dtype != np.int32:
+            arr = arr.astype(jnp.int32)
+        return arr
+    if semiring.dtype == "int16":
+        xp = np if isinstance(arr, np.ndarray) else jnp
+        return xp.clip(arr, I16_NINF, I16_INF).astype(xp.int16)
+    if dtype is not None:
+        return jnp.asarray(arr).astype(dtype)
     if not jnp.issubdtype(arr.dtype, jnp.floating) and not (
         np.isfinite(semiring.zero) and np.isfinite(semiring.one)
     ):
@@ -186,6 +271,8 @@ def solve(
     *,
     method: str = "auto",
     semiring: Semiring | str = MIN_PLUS,
+    dtype=None,
+    packed: bool = False,
     successors: bool = False,
     block_size: int | None = None,
     validate: bool = True,
@@ -216,7 +303,23 @@ def solve(
        (shortest paths), "max_plus" (critical paths), "or_and" (transitive
        closure on {0,1}), "max_min" (bottleneck paths), "plus_mul"
        (ordinary algebra).  ⊕-identity encodes "no edge", ⊗-identity the
-       diagonal.
+       diagonal.  Storage lowerings resolve by name too ("or_and_packed"
+       for pre-packed int32 bit planes, "min_plus_i16" & friends).
+    dtype: storage dtype for the solve — the bandwidth axis.  None keeps
+       the input dtype.  Float dtypes (bfloat16/float32/float64) are a
+       plain cast: half the HBM bytes for bf16 at 8 mantissa bits of
+       precision (distances round to ~3 significant decimal digits; exact
+       for small-int weights with sums below 256).  int16 lowers tropical
+       semirings to *saturating* arithmetic (``core.semiring``): weights
+       clip into [-32768, 32767], +inf ↦ 32767, and relaxation saturates
+       at the sentinels instead of wrapping.  plus_mul has no int16
+       lowering.
+    packed: bit-packed transitive closure (or_and only).  The input is
+       (B, n, n) — or (n, n) for B=1 — boolean graphs (any dtype, nonzero
+       = edge); solve packs 32 graphs per int32 lane
+       (``pack_reachability``), runs ONE closure over the packed words
+       with bitwise OR/AND (~32× fewer HBM bytes per graph than unpacked
+       f32), and unpacks back to the input's shape and dtype.
     successors: also return next-hop matrices (min-plus only; native in the
        fused/staged round kernel as well as the blocked/naive paths).
        succ[..., i, j] = first hop of the shortest i→j path, -1 = no path
@@ -232,7 +335,34 @@ def solve(
     semiring / block_size / padded size for introspection.
     """
     sr = _resolve_semiring(semiring)
-    arr = _coerce(w, sr)
+    if packed:
+        # Pack → closure over int32 bit planes → unpack.  The inner solve is
+        # an ordinary or_and_packed solve; each bit lane is an independent
+        # graph, so the unpacked planes are bitwise equal to B unpacked
+        # solves (tests/test_fw_round.py guards 1..32).
+        if successors:
+            raise ValueError(
+                "successors=True requires min_plus; packed=True is the "
+                "or_and transitive-closure lowering"
+            )
+        sr = lower_semiring(sr, dtype, packed=True)
+        arr = jnp.asarray(w)
+        in_batched = arr.ndim == 3
+        count = arr.shape[0] if in_batched else 1
+        words = pack_reachability(arr)
+        if words.shape[0] == 1:
+            words = words[0]  # keep the single-word case on the 2-D path
+        inner = solve(
+            words, method=method, semiring=sr, block_size=block_size,
+            validate=False, mesh=mesh, row_axes=row_axes, col_axes=col_axes,
+            variant=variant, interpret=interpret,
+        )
+        dist = unpack_reachability(inner.dist, count=count, dtype=arr.dtype)
+        if not in_batched:
+            dist = dist[0]
+        return dataclasses.replace(inner, dist=dist, n=arr.shape[-1])
+    sr = lower_semiring(sr, dtype)
+    arr = _coerce(w, sr, dtype)
     batched = arr.ndim == 3
     n = arr.shape[-1]
     meth, s, m = _resolve_shape(
@@ -259,8 +389,9 @@ def solve(
             run = fw_with_successors
             dist, succ = jax.vmap(run)(wj) if batched else run(wj)
         else:
-            run = lambda x: fw_naive(x, semiring=sr)
-            dist = jax.vmap(run)(wj) if batched else run(wj)
+            # Batch-rank-agnostic: the (B, n, n) case runs the same fori
+            # loop with a leading batch dim — no vmap wrapper.
+            dist = fw_naive(wj, semiring=sr)
     else:
         wp = _pad(jnp.asarray(arr), m, sr)
         if meth == "blocked":
@@ -269,8 +400,9 @@ def solve(
                 out = jax.vmap(run)(wp) if batched else run(wp)
                 dist, succ = out
             else:
-                run = lambda x: fw_blocked(x, block_size=s, semiring=sr)
-                dist = jax.vmap(run)(wp) if batched else run(wp)
+                # Natively batched: fw_blocked slices the (B, m, m) array
+                # directly (leading batch dim), one round loop for all B.
+                dist = fw_blocked(wp, block_size=s, semiring=sr)
         elif meth in ("staged", "fused"):
             # Natively batched: a (B, m, m) input threads the kernels'
             # leading batch grid dimension — one dispatch per round for the
@@ -306,7 +438,7 @@ def solve(
         if succ is not None:
             succ = succ[..., :n, :n]
 
-    if validate and sr is MIN_PLUS:
+    if validate and _is_min_plus(sr):
         _check_negative_cycles(dist, batched)
 
     return APSPResult(

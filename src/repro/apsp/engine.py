@@ -51,13 +51,14 @@ from repro.apsp.api import (
     _check_negative_cycles,
     _check_successor_args,
     _coerce,
+    _is_min_plus,
     _pad,
     _resolve_semiring,
     _resolve_shape,
 )
 from repro.core.floyd_warshall import fw_blocked, fw_naive, fw_numpy
 from repro.core.paths import fw_blocked_with_successors, fw_with_successors
-from repro.core.semiring import MIN_PLUS, Semiring
+from repro.core.semiring import MIN_PLUS, Semiring, lower_semiring
 from repro.core.staged import fw_staged, fw_staged_with_successors
 
 
@@ -126,6 +127,8 @@ class ApspEngine:
         *,
         method: str = "auto",
         semiring: Semiring | str = MIN_PLUS,
+        dtype=None,
+        packed: bool = False,
         block_size: int | None = None,
         bk: int = 32,
         batch_block: int | None = None,
@@ -139,6 +142,17 @@ class ApspEngine:
     ):
         """method/semiring/block dims pin the solve configuration; per-call
         shape/dtype/batch variation is absorbed by the plan cache.
+
+        dtype/packed pin a *storage lowering* at construction
+        (``core.semiring.lower_semiring``): ``dtype=jnp.int16`` runs the
+        saturating int16 tropical lowering, ``dtype=jnp.bfloat16`` casts
+        weights to bf16, and ``packed=True`` (or_and only) serves the
+        bit-packed int32 closure — engine inputs are then *pre-packed*
+        bit-plane words (``api.pack_reachability``; the stateless
+        ``solve(packed=True)`` owns pack/unpack, the engine stays in word
+        space so cached plans see the physical shapes).  Plan keys carry
+        the lowered semiring name + storage dtype, so an f32 and an int16
+        engine never share executables.
 
         mesh/row_axes/col_axes: a ``jax.sharding.Mesh`` enables
         method="distributed" — every cached executable is then a
@@ -154,7 +168,10 @@ class ApspEngine:
                 "construct one (e.g. launch.mesh.make_host_mesh) and pass it"
             )
         self.method = method
-        self.semiring = _resolve_semiring(semiring)
+        self.semiring = lower_semiring(
+            _resolve_semiring(semiring), dtype, packed=packed
+        )
+        self.dtype = dtype
         self.block_size = block_size
         self.bk = bk
         self.batch_block = batch_block
@@ -294,16 +311,15 @@ class ApspEngine:
             if key.successors:
                 fn = jax.vmap(fw_with_successors)
             else:
-                fn = jax.vmap(lambda x: fw_naive(x, semiring=sr))
+                # fw_naive/fw_blocked batch natively over the leading dim.
+                fn = lambda x: fw_naive(x, semiring=sr)
         elif key.method == "blocked":
             if key.successors:
                 fn = jax.vmap(
                     lambda x: fw_blocked_with_successors(x, block_size=s)
                 )
             else:
-                fn = jax.vmap(
-                    lambda x: fw_blocked(x, block_size=s, semiring=sr)
-                )
+                fn = lambda x: fw_blocked(x, block_size=s, semiring=sr)
         else:  # staged / fused — the kernels' native batch grid
             # Same lowering policy as api.solve: no TPU and no explicit
             # interpret request → the fused round's bitwise XLA lowering.
@@ -347,7 +363,7 @@ class ApspEngine:
     # -------------------------------------------------------------- solving
     def solve(self, w, *, successors: bool = False) -> APSPResult:
         """One graph or one uniform (B, n, n) batch through the cache."""
-        arr = _coerce(w, self.semiring)
+        arr = _coerce(w, self.semiring, self.dtype)
         batched = arr.ndim == 3
         n = arr.shape[-1]
         B = arr.shape[0] if batched else 1
@@ -361,7 +377,7 @@ class ApspEngine:
         if not batched:
             dist = dist[0]
             succ = succ[0] if succ is not None else None
-        if self.validate and self.semiring is MIN_PLUS:
+        if self.validate and _is_min_plus(self.semiring):
             _check_negative_cycles(dist, batched)
         self.stats.solves += 1
         self.stats.graphs_solved += B
@@ -379,7 +395,7 @@ class ApspEngine:
         """
         if hasattr(graphs, "ndim") and getattr(graphs, "ndim", 0) == 3:
             graphs = list(graphs)
-        arrs = [_coerce(g, self.semiring) for g in graphs]
+        arrs = [_coerce(g, self.semiring, self.dtype) for g in graphs]
         for a in arrs:
             if a.ndim != 2:
                 raise ValueError(
@@ -405,7 +421,7 @@ class ApspEngine:
                 [_pad(jnp.asarray(arrs[i]), m, self.semiring) for i in idxs]
             )
             dist, succ = self._run(entry, wb, m)
-            if self.validate and self.semiring is MIN_PLUS:
+            if self.validate and _is_min_plus(self.semiring):
                 bad = np.asarray(negative_cycle_mask_padded(dist, [
                     metas[i][0] for i in idxs
                 ]))

@@ -11,6 +11,40 @@ from __future__ import annotations
 import math
 
 
+# Bytes per element for the storage dtypes the kernels run.  A name map, not
+# np.dtype(): plan stays host-side arithmetic with no jax/ml_dtypes import
+# (bfloat16 is not a stock numpy dtype).
+_WORD_BYTES = {
+    "float64": 8, "int64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+}
+
+
+def word_for(dtype=None, *, semiring=None) -> int:
+    """Bytes per stored element for a solve — THE dtype axis of the byte
+    models.
+
+    Accepts a dtype name / numpy dtype / jnp scalar type, or a semiring
+    whose lowering pins a storage dtype (``Semiring.dtype``; the pinned
+    dtype wins over ``dtype=None``).  Defaults to 4 (f32/i32 words, the
+    historical model) when neither names one.
+    """
+    if semiring is not None and getattr(semiring, "dtype", None) is not None:
+        dtype = semiring.dtype
+    if dtype is None:
+        return 4
+    name = getattr(dtype, "name", None) or getattr(dtype, "__name__", None) \
+        or str(dtype)
+    try:
+        return _WORD_BYTES[name]
+    except KeyError:
+        raise ValueError(
+            f"no byte-model word size for dtype {dtype!r}; "
+            f"known: {sorted(_WORD_BYTES)}"
+        ) from None
+
+
 def padded_size(n: int, block: int) -> int:
     """Smallest multiple of ``block`` that is >= n."""
     return ((n + block - 1) // block) * block
@@ -247,6 +281,35 @@ def fused_round_steps(n: int, s: int, *, batch: int = 1) -> int:
     return batch * (T * T + 2 * T - 1)
 
 
+def fused_solve_hbm_bytes(
+    n: int, s: int, *, word: int = 4, batch: int = 1
+) -> float:
+    """Modeled HBM traffic of a WHOLE fused solve: n/s rounds ×
+    ``fused_round_hbm_bytes`` — the numerator of the achieved-bandwidth
+    number the benchmarks report."""
+    return round_count(n, s) * fused_round_hbm_bytes(
+        n, s, word=word, batch=batch
+    )
+
+
+def achieved_hbm_gbps(
+    n: int, s: int, seconds: float, *, word: int = 4, batch: int = 1
+) -> float:
+    """Achieved HBM bandwidth (GB/s) of a measured fused solve.
+
+    Modeled solve bytes (``fused_solve_hbm_bytes``) over measured wall time
+    — the number that makes "the round is bandwidth-bound" a figure instead
+    of prose.  Compare against the device's peak (e.g. ~819 GB/s per v5e
+    core); a ratio near 1 means the byte model, not compute, sets the
+    runtime.  ``word`` carries the dtype axis: at a fixed graph, halving
+    the word halves the bytes — if measured time does NOT halve with it,
+    the solve has left the bandwidth-bound regime.
+    """
+    if seconds <= 0:
+        raise ValueError(f"seconds must be > 0, got {seconds}")
+    return fused_solve_hbm_bytes(n, s, word=word, batch=batch) / seconds / 1e9
+
+
 def auto_batch_block(
     B: int,
     n: int,
@@ -284,7 +347,9 @@ def fw_candidates(
     *,
     batch: int = 1,
     vmem_budget: int = 128 << 20,
-    word: int = 4,
+    word: int | None = None,
+    dtype=None,
+    lanes: int = 1,
     variant: str = "fori",
     block_sizes: tuple[int, ...] = (32, 64, 128, 256),
     bks: tuple[int, ...] = (8, 16, 32, 64, 128),
@@ -299,7 +364,19 @@ def fw_candidates(
     ``batch_block`` (the fattest divisor of ``batch`` the budget admits)
     and per-round HBM/step counts scale to the whole batch.  Deterministic
     — the benchmark key manifest is derived from it.
+
+    Byte models are dtype- and packing-aware: ``dtype`` (or an explicit
+    ``word``; word wins) sets the bytes per stored element, and ``lanes``
+    (32 for the bit-packed or_and lowering — ``Semiring.lanes``) divides
+    the per-*graph* traffic: each candidate carries
+    ``hbm_bytes_per_graph = hbm_bytes_total / (batch·lanes)``, the number
+    that makes an int16 or packed config comparable to f32 at the same
+    logical workload.
     """
+    if word is None:
+        word = word_for(dtype)
+    if lanes < 1:
+        raise ValueError(f"lanes must be >= 1, got {lanes}")
     out = []
     for s in block_sizes:
         if s > max(n, 16):
@@ -323,10 +400,11 @@ def fw_candidates(
                 per_round = fused_round_hbm_bytes(m, sp, word=word, batch=batch)
                 out.append(dict(
                     impl="fused", block_size=sp, bm=sp, bn=sp, bk=bk,
-                    batch=batch, batch_block=bb,
+                    batch=batch, batch_block=bb, word=word, lanes=lanes,
                     vmem_bytes=v,
                     hbm_bytes_per_round=per_round,
                     hbm_bytes_total=rounds * per_round,
+                    hbm_bytes_per_graph=rounds * per_round / (batch * lanes),
                     steps_per_round=fused_round_steps(m, sp,
                                                       batch=batch // bb),
                     dispatches_per_round=1,
@@ -341,10 +419,12 @@ def fw_candidates(
                     )
                     out.append(dict(
                         impl="staged", block_size=sp, bm=bm, bn=bm, bk=bk,
-                        batch=batch, batch_block=1,
+                        batch=batch, batch_block=1, word=word, lanes=lanes,
                         vmem_bytes=v3,
                         hbm_bytes_per_round=per_round,
                         hbm_bytes_total=rounds * per_round,
+                        hbm_bytes_per_graph=rounds * per_round
+                        / (batch * lanes),
                         steps_per_round=batch * (m // bm) ** 2 * (sp // bk),
                         dispatches_per_round=4,
                     ))
@@ -357,6 +437,8 @@ def autotune_fw(
     *,
     batch: int = 1,
     vmem_budget: int = 128 << 20,
+    dtype=None,
+    lanes: int = 1,
     variant: str = "fori",
     top: int | None = None,
 ) -> list[dict]:
@@ -371,9 +453,15 @@ def autotune_fw(
     §Roofline) — with fused-before-staged dispatch count as tiebreak.
     ``batch=B`` ranks configs for a B-graph batched solve instead (same
     model, scaled; fused candidates carry the chosen ``batch_block``).
+    ``dtype``/``lanes`` thread the storage lowering through the byte
+    models (``fw_candidates``): a bf16/int16 solve halves every modeled
+    byte count — and therefore the fitted VMEM footprints and the ranking
+    — and a packed or_and solve additionally divides the per-graph bytes
+    by 32, which is exactly why autotune ranks those lowerings first at
+    equal logical work.
     """
     cands = fw_candidates(n, batch=batch, vmem_budget=vmem_budget,
-                          variant=variant)
+                          dtype=dtype, lanes=lanes, variant=variant)
     if not cands:
         raise ValueError(
             f"no viable round config for n={n} within vmem_budget="

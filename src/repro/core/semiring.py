@@ -12,15 +12,42 @@ blocked/staged kernel machinery serves:
 
 On TPU only PLUS_MUL can use the MXU; the tropical semirings execute on the
 VPU, which changes the roofline (see EXPERIMENTS.md §Roofline).
+
+Bandwidth-lean lowerings (docs/KERNELS.md §Bytes per round): the kernels are
+HBM-bound, so bytes-per-relaxation is a first-class planning axis.
+``lower_semiring(sr, dtype, packed=…)`` maps an abstract semiring to a
+storage lowering:
+
+  * **bit-packed or_and** (``OR_AND_PACKED``) — 32 independent reachability
+    graphs per int32 lane, ⊕ = bitwise OR, ⊗ = bitwise AND.  One int32
+    element carries 32 graphs' relaxations → 32× fewer bytes per logical
+    relaxation than unpacked f32 {0,1}.
+  * **int16 tropical** — min_plus/max_plus with *saturating* ⊗ (widen to
+    int32, add, clamp to [-32768, 32767]) and sentinel-propagating
+    ±INF (``I16_INF``/``I16_NINF``); max_min/or_and need no arithmetic and
+    lower to plain int16 min/max.  Half the HBM traffic of f32.
+  * **bf16** — the float ops are dtype-polymorphic; the lowering is the
+    identity (±inf is representable), at half the traffic and 8 mantissa
+    bits of precision.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax.numpy as jnp
 
 Array = jnp.ndarray
+
+# int16 tropical sentinels: ⊕-identities of min_plus / max_plus.  Saturating
+# ⊗ clamps into (I16_NINF, I16_INF) for finite operands and propagates the
+# sentinels exactly, so no sum ever wraps past them (test_semiring_properties).
+I16_INF = 32767
+I16_NINF = -32768
+
+# Graphs per element of the bit-packed or_and lowering (int32 lanes).
+PACK_LANES = 32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,15 +62,26 @@ class Semiring:
       one: identity of ⊗, e.g. ``0.0`` for min-plus.
       add_reduce: reduction form of ⊕ over an axis, e.g. ``jnp.min``.
       uses_mxu: True iff ⊗/⊕ lower to a hardware matmul (dot-general).
+      dtype: storage dtype this lowering is pinned to (None = polymorphic —
+        the abstract semiring, valid for any float dtype).
+      lanes: independent graphs carried per element (32 for the bit-packed
+        or_and lowering, 1 otherwise) — the byte models divide by it.
     """
 
     name: str
     add: Callable[[Array, Array], Array]
     mul: Callable[[Array, Array], Array]
-    zero: float
-    one: float
+    zero: float | int
+    one: float | int
     add_reduce: Callable[..., Array]
     uses_mxu: bool = False
+    dtype: str | None = None
+    lanes: int = 1
+
+    @property
+    def packed(self) -> bool:
+        """True iff this lowering bit-packs multiple graphs per element."""
+        return self.lanes > 1
 
     def matmul_reference(self, a: Array, b: Array) -> Array:
         """O(m·k·n) reference ⊕/⊗ matmul (the jnp oracle for the kernels).
@@ -105,3 +143,143 @@ PLUS_MUL = Semiring(
 )
 
 SEMIRINGS = {s.name: s for s in (MIN_PLUS, MAX_PLUS, MAX_MIN, OR_AND, PLUS_MUL)}
+
+
+def _or_reduce(x: Array, axis: int) -> Array:
+    return jnp.bitwise_or.reduce(x, axis=axis)
+
+
+# Bit-packed transitive closure: element [i, j] is an int32 whose bit g is
+# "edge i→j exists in graph g" for 32 independent graphs.  ⊕ = bitwise OR
+# and ⊗ = bitwise AND relax all 32 bit lanes at once — r[i,j] |= r[i,k] &
+# r[k,j] per lane — so every FW kernel in the package (fused round, bordered
+# round, phase kernels, their XLA twins) runs 32 closures per dispatch at
+# 1/8th the bytes-per-graph of unpacked f32 {0,1}.  ⊕-identity 0 = no edges
+# anywhere; ⊗-identity -1 = all 32 bits set (the diagonal: every graph has
+# its self-loop).  Distributed broadcasts work unchanged: the masked
+# ⊕-reduce falls through to psum, which is exact because exactly one device
+# contributes a nonzero int32 word.
+OR_AND_PACKED = Semiring(
+    name="or_and_packed",
+    add=jnp.bitwise_or,
+    mul=jnp.bitwise_and,
+    zero=0,
+    one=-1,
+    add_reduce=_or_reduce,
+    dtype="int32",
+    lanes=PACK_LANES,
+)
+
+def _sat_tropical_mul(dominant: int, other: int):
+    """Saturating int16 ⊗ (path concatenation): widen, add, clamp, and
+    propagate the ±INF sentinels exactly.
+
+    Without the sentinel propagation, INF ⊗ (-w) would land at INF - w — a
+    *finite* fake path through a missing edge; with it, annihilation
+    (zero ⊗ x = zero) holds exactly, which is what makes padding vertices
+    unreachable and blocked == naive.  Finite sums clamp to
+    [I16_NINF, I16_INF], so overflow aliases to the matching sentinel
+    ("unreachable"/"unbounded") rather than wrapping sign (the documented
+    int16 contract, docs/KERNELS.md §Bytes per round).  ``dominant`` is the
+    lowering's ⊕-identity sentinel — it wins when both sentinels meet
+    (dominant ⊗ other is ill-posed; pinning annihilation-by-zero keeps the
+    semiring laws unconditional).
+    """
+
+    def mul(a: Array, b: Array) -> Array:
+        s = jnp.asarray(a, jnp.int32) + jnp.asarray(b, jnp.int32)
+        s = jnp.clip(s, I16_NINF, I16_INF).astype(jnp.int16)
+        s = jnp.where(
+            jnp.logical_or(a == other, b == other), jnp.int16(other), s
+        )
+        return jnp.where(
+            jnp.logical_or(a == dominant, b == dominant),
+            jnp.int16(dominant), s,
+        )
+
+    return mul
+
+
+# min_plus: ⊕-identity INF absorbs ⊗ by sentinel propagation; max_plus is
+# the mirror image with NINF dominating.
+MIN_PLUS_I16 = dataclasses.replace(
+    MIN_PLUS, name="min_plus_i16", mul=_sat_tropical_mul(I16_INF, I16_NINF),
+    zero=I16_INF, one=0, dtype="int16",
+)
+MAX_PLUS_I16 = dataclasses.replace(
+    MAX_PLUS, name="max_plus_i16",
+    mul=_sat_tropical_mul(I16_NINF, I16_INF),
+    zero=I16_NINF, one=0, dtype="int16",
+)
+# max_min / or_and involve no arithmetic — int16 min/max cannot overflow.
+MAX_MIN_I16 = dataclasses.replace(
+    MAX_MIN, name="max_min_i16", zero=I16_NINF, one=I16_INF, dtype="int16",
+)
+OR_AND_I16 = dataclasses.replace(
+    OR_AND, name="or_and_i16", zero=0, one=1, dtype="int16",
+)
+
+_I16_LOWERINGS = {
+    MIN_PLUS.name: MIN_PLUS_I16,
+    MAX_PLUS.name: MAX_PLUS_I16,
+    MAX_MIN.name: MAX_MIN_I16,
+    OR_AND.name: OR_AND_I16,
+}
+
+# Named lowerings are resolvable wherever a semiring name is (solve /
+# ApspEngine / benchmarks) without widening the 5-semiring lattice itself.
+LOWERED_SEMIRINGS = {
+    s.name: s
+    for s in (
+        OR_AND_PACKED, MIN_PLUS_I16, MAX_PLUS_I16, MAX_MIN_I16, OR_AND_I16
+    )
+}
+
+
+@functools.cache
+def lower_semiring(sr: Semiring, dtype=None, *, packed: bool = False) -> Semiring:
+    """THE storage-lowering map: (abstract semiring, dtype, packed) → the
+    semiring the kernels actually run.
+
+    Cached so repeated calls return the *same* object — the kernels take the
+    semiring as a static jit argument, and identity-stable lowerings mean a
+    re-solve never retraces.
+
+      * ``packed=True`` — or_and only → ``OR_AND_PACKED`` (int32 bit lanes;
+        a ``dtype`` other than int32 is rejected).
+      * int16 → the saturating/sentinel lowerings above (plus_mul has no
+        sound 16-bit overflow semantics and is rejected).
+      * float dtypes (f32/bf16/f64/f16) → the identity: every float op in
+        the lattice is dtype-polymorphic and ±inf is representable.
+      * ``dtype=None`` → identity (the caller keeps the input dtype).
+    """
+    if packed:
+        if sr.name not in (OR_AND.name, OR_AND_PACKED.name):
+            raise ValueError(
+                f"packed=True is the bit-packed transitive-closure lowering; "
+                f"it requires the or_and semiring, not {sr.name!r}"
+            )
+        if dtype is not None and jnp.dtype(dtype) != jnp.dtype(jnp.int32):
+            raise ValueError(
+                f"the packed or_and lowering stores int32 bit lanes, "
+                f"got dtype={dtype!r}"
+            )
+        return OR_AND_PACKED
+    if dtype is None or sr.dtype is not None:
+        return sr  # already a concrete lowering (or nothing requested)
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.floating):
+        return sr
+    if dt == jnp.dtype(jnp.int16):
+        try:
+            return _I16_LOWERINGS[sr.name]
+        except KeyError:
+            raise ValueError(
+                f"no int16 lowering for semiring {sr.name!r} (plus_mul "
+                f"needs true ring arithmetic; 16-bit overflow is unsound)"
+            ) from None
+    raise ValueError(
+        f"no {dt} lowering for semiring {sr.name!r}; supported narrow "
+        f"dtypes: int16 (saturating tropical), bfloat16, and packed int32 "
+        f"or_and (packed=True)"
+    )

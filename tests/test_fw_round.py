@@ -21,21 +21,33 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.apsp import plan, solve
+from repro.apsp import pack_reachability, plan, solve, unpack_reachability
 from repro.core.floyd_warshall import fw_naive
 from repro.core.graph import random_digraph
 from repro.core.paths import fw_blocked_with_successors
-from repro.core.semiring import MAX_MIN, MIN_PLUS, SEMIRINGS
+from repro.core.semiring import (
+    I16_INF,
+    LOWERED_SEMIRINGS,
+    MAX_MIN,
+    MIN_PLUS,
+    PACK_LANES,
+    SEMIRINGS,
+)
 from repro.core.staged import fw_staged, fw_staged_with_successors
 from repro.kernels.fw_phase1 import fw_phase1
 from repro.kernels.fw_phase2 import fw_phase2_col, fw_phase2_row
 from repro.kernels.fw_round import (
     _round_order,
     fw_round,
+    fw_round_bordered,
     fw_round_with_successors,
 )
 from repro.kernels.minplus_matmul import semiring_matmul
-from repro.kernels.ref import fw_phase2_col_ref, fw_phase2_row_ref
+from repro.kernels.ref import (
+    fw_phase2_col_ref,
+    fw_phase2_row_ref,
+    fw_round_bordered_ref,
+)
 
 
 def _graph(n, seed, dtype=jnp.float32):
@@ -402,3 +414,143 @@ def test_plan_candidates_and_autotune():
     )
     assert [c["us"] for c in measured] == sorted(c["us"] for c in measured)
     assert all("us" in c for c in measured)
+
+
+# ----------------------------------------- bandwidth-lean storage lowerings
+def _lowered_data(sr, shape, seed):
+    """Random input in a lowering's native storage: int32 words for the
+    bit-packed closure, {0,1} int16 for or_and_i16, int16 with ⊕-identity
+    sentinels sprinkled ("missing edges") for the tropical lowerings."""
+    rng = np.random.default_rng(seed)
+    if sr.packed:
+        words = rng.integers(0, 1 << 32, size=shape, dtype=np.uint64)
+        return jnp.asarray(words.astype(np.uint32).view(np.int32))
+    if sr.name == "or_and_i16":
+        return jnp.asarray((rng.uniform(size=shape) < 0.25).astype(np.int16))
+    v = rng.integers(-40, 40, size=shape).astype(np.int16)
+    v[rng.uniform(size=shape) < 0.15] = np.int16(sr.zero)
+    return jnp.asarray(v)
+
+
+@pytest.mark.parametrize("name", sorted(LOWERED_SEMIRINGS))
+def test_lowered_round_bitwise(name):
+    """Every storage lowering (bit-packed or_and, saturating int16 tropical)
+    through the fused Pallas round == the seed 4-kernel lowering == the XLA
+    "ref" twin, bit for bit — the kernels are dtype/operator generic."""
+    sr = LOWERED_SEMIRINGS[name]
+    w = _lowered_data(sr, (96, 96), seed=13)
+    kw = dict(block_size=32, bk=16, semiring=sr)
+    fused = fw_staged(w, interpret=True, **kw)
+    unrolled = fw_staged(w, unroll_rounds=True, fused=False, interpret=True,
+                         **kw)
+    ref = fw_staged(w, fused="ref", **kw)
+    assert fused.dtype == w.dtype
+    assert np.array_equal(np.asarray(fused), np.asarray(unrolled))
+    assert np.array_equal(np.asarray(fused), np.asarray(ref))
+
+
+def test_bf16_ref_round_bitwise():
+    # bf16 closes the dtype matrix: Pallas interpreter == execution-grade ref.
+    w = _graph(96, seed=7, dtype=jnp.bfloat16)
+    kw = dict(block_size=32, bk=16, semiring=MIN_PLUS)
+    pallas = fw_staged(w, interpret=True, **kw)
+    ref = fw_staged(w, fused="ref", **kw)
+    assert pallas.dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(pallas, np.float32),
+                          np.asarray(ref, np.float32))
+
+
+@pytest.mark.parametrize("owner", [(-1, -1), (1, 1)], ids=["ghost", "owner"])
+@pytest.mark.parametrize(
+    "case", ["min_plus_i16", "max_plus_i16", "or_and_packed", "bf16"])
+def test_bordered_round_lowerings_bitwise(case, owner):
+    """The distributed bordered round stays bitwise-equal to its XLA twin
+    through every bandwidth-lean lowering (acceptance criterion)."""
+    s, rows, cols = 32, 96, 64
+    if case == "bf16":
+        sr = MIN_PLUS
+        rng = np.random.default_rng(21)
+        w = jnp.asarray(rng.uniform(1, 10, (rows, cols)).astype(np.float32),
+                        jnp.bfloat16)
+    else:
+        sr = LOWERED_SEMIRINGS[case]
+        w = _lowered_data(sr, (rows, cols), seed=21)
+    orow, ocol = owner
+    kw = dict(block_size=s, bk=16, semiring=sr)
+    try:
+        got = fw_round_bordered(w, orow, ocol, interpret=True, **kw)
+    except NotImplementedError:
+        pytest.skip("pallas TPU lowering unavailable in this build")
+    want = fw_round_bordered_ref(w, orow, ocol, **kw)
+    assert got.dtype == w.dtype
+    to_np = (lambda x: np.asarray(x, np.float32)) if case == "bf16" else np.asarray
+    assert np.array_equal(to_np(got), to_np(want))
+
+
+# ------------------------------------------------ packed closure via solve()
+def test_pack_unpack_roundtrip_and_layout():
+    rng = np.random.default_rng(9)
+    for B in (1, 3, PACK_LANES, PACK_LANES + 7):
+        bits = (rng.uniform(size=(B, 6, 6)) < 0.5).astype(np.float32)
+        words = pack_reachability(bits)
+        assert words.dtype == jnp.int32
+        assert words.shape == (-(-B // PACK_LANES), 6, 6)
+        back = unpack_reachability(words, count=B)
+        assert np.array_equal(np.asarray(back), bits)
+    # LSB-first layout: graph g lives at word g // 32, bit g % 32.
+    bits = (rng.uniform(size=(3, 6, 6)) < 0.5).astype(np.float32)
+    w0 = np.asarray(pack_reachability(bits))[0]
+    for g in range(3):
+        assert np.array_equal(((w0 >> g) & 1).astype(np.float32), bits[g])
+
+
+def test_packed_solve_matches_unpacked_all_counts():
+    """pack → solve(packed=True) → unpack == the unpacked or_and solve,
+    bitwise, for every graph count B ∈ 1..32 (one word's worth of lanes)."""
+    n = 24
+    rng = np.random.default_rng(5)
+    pool = (rng.uniform(size=(PACK_LANES, n, n)) < 0.12).astype(np.float32)
+    for g in range(PACK_LANES):
+        np.fill_diagonal(pool[g], 1.0)
+    want = np.asarray(
+        solve(jnp.asarray(pool), semiring="or_and", method="fused",
+              block_size=8).dist)
+    for B in range(1, PACK_LANES + 1):
+        res = solve(pool[:B], semiring="or_and", packed=True, method="fused",
+                    block_size=8)
+        assert res.dist.shape == (B, n, n)
+        assert np.array_equal(np.asarray(res.dist), want[:B]), f"B={B}"
+
+
+def test_packed_solve_single_graph_2d():
+    # A 2-D (n, n) input round-trips through the pack adapter unchanged.
+    rng = np.random.default_rng(6)
+    w = (rng.uniform(size=(40, 40)) < 0.15).astype(np.float32)
+    np.fill_diagonal(w, 1.0)
+    res = solve(w, semiring="or_and", packed=True, method="fused",
+                block_size=32)
+    ref = solve(w, semiring="or_and", method="fused", block_size=32)
+    assert res.dist.shape == (40, 40)
+    assert np.array_equal(np.asarray(res.dist), np.asarray(ref.dist))
+
+
+def test_packed_solve_rejects_successors():
+    w = (np.random.default_rng(1).uniform(size=(16, 16)) < 0.2)
+    with pytest.raises(ValueError):
+        solve(w.astype(np.float32), semiring="or_and", packed=True,
+              successors=True)
+
+
+def test_solve_int16_dtype_end_to_end():
+    """dtype=int16 through solve(): inf edges coerce to the I16_INF
+    sentinel, distances bit-match the f32 solve on integer weights."""
+    rng = np.random.default_rng(8)
+    w = rng.integers(1, 50, size=(60, 60)).astype(np.float32)
+    w[rng.uniform(size=(60, 60)) < 0.5] = np.inf
+    np.fill_diagonal(w, 0.0)
+    res = solve(w, dtype=jnp.int16, method="fused", block_size=32)
+    assert res.dist.dtype == jnp.int16
+    want = np.asarray(solve(w, method="fused", block_size=32).dist)
+    got = np.asarray(res.dist).astype(np.float32)
+    got[got == I16_INF] = np.inf
+    assert np.array_equal(got, want)

@@ -7,11 +7,27 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.semiring import MAX_MIN, MAX_PLUS, MIN_PLUS, OR_AND, SEMIRINGS
+from repro.core.semiring import (
+    I16_INF,
+    I16_NINF,
+    LOWERED_SEMIRINGS,
+    MAX_MIN,
+    MAX_PLUS,
+    MAX_PLUS_I16,
+    MIN_PLUS,
+    MIN_PLUS_I16,
+    OR_AND,
+    OR_AND_PACKED,
+    PACK_LANES,
+    PLUS_MUL,
+    SEMIRINGS,
+    lower_semiring,
+)
 
 finite = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
                    allow_infinity=False, width=32)
 boolish = st.sampled_from([0.0, 1.0])
+i16s = st.integers(min_value=I16_NINF, max_value=I16_INF)
 
 
 def _vals(sr):
@@ -75,3 +91,144 @@ def test_property_matmul_assoc(seed, name):
     rhs = sr.matmul_reference(a, sr.matmul_reference(b, c))
     np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4,
                                atol=1e-4)
+
+
+# -------------------------------------------- int16 saturating lowerings
+@pytest.mark.parametrize("sr,dom", [
+    (MIN_PLUS_I16, I16_INF), (MAX_PLUS_I16, I16_NINF),
+], ids=["min_plus_i16", "max_plus_i16"])
+def test_i16_identities_and_sentinel_absorption(sr, dom):
+    vals = jnp.asarray([I16_NINF, I16_NINF + 1, -100, -1, 0, 1, 100,
+                        I16_INF - 1, I16_INF], jnp.int16)
+    zero, one = jnp.int16(sr.zero), jnp.int16(sr.one)
+    np.testing.assert_array_equal(sr.add(vals, zero), vals)
+    np.testing.assert_array_equal(sr.mul(vals, one), vals)
+    # zero annihilates ⊗ exactly — INCLUDING against the opposite sentinel
+    # (INF ⊗ NINF = INF for min_plus): a missing edge beats anything.
+    np.testing.assert_array_equal(sr.mul(vals, zero), jnp.full_like(vals, dom))
+    np.testing.assert_array_equal(sr.mul(zero, vals), jnp.full_like(vals, dom))
+
+
+def test_i16_saturation_no_wraparound():
+    """Finite ⊗ sums clamp to the matching sentinel instead of wrapping
+    sign: 32000 + 32000 saturates to I16_INF, never a negative alias."""
+    big, neg = jnp.int16(32000), jnp.int16(-32000)
+    assert int(MIN_PLUS_I16.mul(big, big)) == I16_INF
+    assert int(MIN_PLUS_I16.mul(neg, neg)) == I16_NINF
+    assert int(MAX_PLUS_I16.mul(big, big)) == I16_INF
+    assert int(MAX_PLUS_I16.mul(neg, neg)) == I16_NINF
+
+
+def test_i16_mul_grid_never_wraps():
+    """Deterministic twin of the hypothesis property below (runs without
+    hypothesis): all pairs from a boundary-heavy grid, vectorized."""
+    rng = np.random.default_rng(4)
+    grid = np.unique(np.concatenate([
+        np.asarray([I16_NINF, I16_NINF + 1, -32000, -1, 0, 1, 32000,
+                    I16_INF - 1, I16_INF]),
+        rng.integers(I16_NINF, I16_INF + 1, size=50),
+    ])).astype(np.int16)
+    a = np.repeat(grid, grid.size)
+    b = np.tile(grid, grid.size)
+    for sr, dom, oth in ((MIN_PLUS_I16, I16_INF, I16_NINF),
+                         (MAX_PLUS_I16, I16_NINF, I16_INF)):
+        want = np.clip(a.astype(np.int64) + b, I16_NINF, I16_INF)
+        want = np.where((a == oth) | (b == oth), oth, want)
+        want = np.where((a == dom) | (b == dom), dom, want)
+        got = np.asarray(sr.mul(jnp.asarray(a), jnp.asarray(b)))
+        np.testing.assert_array_equal(got.astype(np.int64), want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=i16s, b=i16s)
+def test_property_i16_mul_never_wraps(a, b):
+    """For every int16 pair: the saturating ⊗ equals the exact widened sum
+    clamped to [I16_NINF, I16_INF] (sentinels propagating, dominant wins)."""
+    fa, fb = jnp.int16(a), jnp.int16(b)
+    for sr, dom, oth in ((MIN_PLUS_I16, I16_INF, I16_NINF),
+                         (MAX_PLUS_I16, I16_NINF, I16_INF)):
+        if a == dom or b == dom:
+            want = dom
+        elif a == oth or b == oth:
+            want = oth
+        else:
+            want = max(I16_NINF, min(I16_INF, a + b))
+        assert int(sr.mul(fa, fb)) == want
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=i16s, b=i16s, c=i16s,
+       name=st.sampled_from(["min_plus_i16", "max_plus_i16", "max_min_i16",
+                             "or_and_i16"]))
+def test_property_i16_distributivity(a, b, c, name):
+    """a ⊗ (b ⊕ c) == (a ⊗ b) ⊕ (a ⊗ c) holds EXACTLY under saturation —
+    the clamp is monotone, so blocking stays valid for the i16 lowerings."""
+    sr = LOWERED_SEMIRINGS[name]
+    if name == "or_and_i16":
+        a, b, c = (int(v > 0) for v in (a, b, c))
+    fa, fb, fc = (jnp.int16(v) for v in (a, b, c))
+    lhs = sr.mul(fa, sr.add(fb, fc))
+    rhs = sr.add(sr.mul(fa, fb), sr.mul(fa, fc))
+    assert int(lhs) == int(rhs)
+    assert int(sr.add(fa, fb)) == int(sr.add(fb, fa))
+
+
+# ------------------------------------------------- bit-packed or_and laws
+def _words(rng, shape):
+    w = rng.integers(0, 1 << 32, size=shape, dtype=np.uint64)
+    return jnp.asarray(w.astype(np.uint32).view(np.int32))
+
+
+def test_packed_identities_and_laws():
+    rng = np.random.default_rng(11)
+    a, b, c = (_words(rng, (7,)) for _ in range(3))
+    sr = OR_AND_PACKED
+    zero, one = jnp.int32(sr.zero), jnp.int32(sr.one)
+    np.testing.assert_array_equal(sr.add(a, zero), a)   # OR  0  = identity
+    np.testing.assert_array_equal(sr.mul(a, one), a)    # AND -1 = identity
+    np.testing.assert_array_equal(sr.mul(a, zero), jnp.zeros_like(a))
+    np.testing.assert_array_equal(sr.add(sr.add(a, b), c),
+                                  sr.add(a, sr.add(b, c)))
+    np.testing.assert_array_equal(sr.mul(a, sr.add(b, c)),
+                                  sr.add(sr.mul(a, b), sr.mul(a, c)))
+
+
+def test_packed_matmul_is_32_independent_closures():
+    """The packed matmul_reference == the unpacked or_and matmul run on each
+    of the 32 bit planes independently — lane isolation, no carry ever."""
+    rng = np.random.default_rng(12)
+    a, b = _words(rng, (6, 6)), _words(rng, (6, 6))
+    got = np.asarray(OR_AND_PACKED.matmul_reference(a, b))
+    for g in range(PACK_LANES):
+        pa = ((np.asarray(a) >> g) & 1).astype(np.float32)
+        pb = ((np.asarray(b) >> g) & 1).astype(np.float32)
+        want = np.asarray(
+            OR_AND.matmul_reference(jnp.asarray(pa), jnp.asarray(pb)))
+        np.testing.assert_array_equal(((got >> g) & 1).astype(np.float32),
+                                      want)
+
+
+# ------------------------------------------------ the storage-lowering map
+def test_lower_semiring_identity_stable():
+    # Same object out for same request: the kernels take the semiring as a
+    # static jit arg, so identity stability == no retrace on re-solve.
+    assert lower_semiring(MIN_PLUS, jnp.int16) is MIN_PLUS_I16
+    assert lower_semiring(MIN_PLUS, jnp.int16) is lower_semiring(
+        MIN_PLUS, jnp.int16)
+    assert lower_semiring(OR_AND, packed=True) is OR_AND_PACKED
+    assert lower_semiring(OR_AND_PACKED, packed=True) is OR_AND_PACKED
+    # float dtypes and already-concrete lowerings pass through unchanged.
+    assert lower_semiring(MIN_PLUS, jnp.bfloat16) is MIN_PLUS
+    assert lower_semiring(MIN_PLUS) is MIN_PLUS
+    assert lower_semiring(MIN_PLUS_I16, jnp.int16) is MIN_PLUS_I16
+
+
+def test_lower_semiring_rejections():
+    with pytest.raises(ValueError):
+        lower_semiring(PLUS_MUL, jnp.int16)  # no sound 16-bit ring
+    with pytest.raises(ValueError):
+        lower_semiring(MIN_PLUS, jnp.int8)
+    with pytest.raises(ValueError):
+        lower_semiring(MIN_PLUS, packed=True)  # packed is or_and-only
+    with pytest.raises(ValueError):
+        lower_semiring(OR_AND, jnp.int16, packed=True)  # words are int32
