@@ -24,6 +24,12 @@ trajectory is machine-trackable across PRs.
                      (block_size, bm, bn, bk) round configs
   fw_packed        — bit-packed or_and transitive closure (32 graphs per
                      int32 lane) vs unpacked f32 or_and at n=1024
+  fw_repair        — rank-1 incremental repair (ApspEngine.repair) vs the
+                     full fused re-solve at n=1024 (single-edge and batched
+                     16-edge dispatches; acceptance bar: repair ≥ 5×)
+  serve_qps        — mixed query/update load through the layered serving
+                     stack (serve/routing.py): per-query p50/p99 + QPS,
+                     repair-vs-resolve refresh split in the derived column
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...]
      PYTHONPATH=src python -m benchmarks.run --smoke
@@ -366,6 +372,84 @@ def bench_fw_packed():
     return rows
 
 
+REPAIR_N = 1024
+
+
+def bench_fw_repair():
+    """Rank-1 incremental repair vs full fused re-solve at n=1024.
+
+    The serving fast path of ISSUE 7: absorbing E ⊕-improving edge updates
+    into an existing closure is O(E·n²) HBM traffic against the full
+    solve's O(n³/s·n²)-ish rounds.  Rows:
+
+      full_resolve — the fused one-dispatch-per-round solve (the refresh
+                     cost a repair avoids)
+      repair_e1    — one warm single-edge repair dispatch
+      repair_e16   — a batched 16-edge update set through one dispatch
+      speedup      — full_resolve / repair_e1; acceptance bar ≥ 5×, the
+                     byte model (plan.repair_hbm_bytes vs
+                     plan.fused_solve_hbm_bytes) predicts ~n/(2s)·rounds
+    """
+    from repro.apsp import ApspEngine
+    from repro.core.graph import random_digraph
+
+    rows = []
+    n = REPAIR_N
+    w = random_digraph(n, density=1.0, seed=n)
+    eng = ApspEngine(method="fused", validate=False)
+    r0 = eng.solve(w)
+    t_solve = fw_table1._time(lambda: eng.solve(w).dist, reps=2)
+    upd1 = [(3, 7, 1e-3)]
+    upd16 = [(i, (i * 37 + 11) % n, 1e-3 + i * 1e-6) for i in range(16)]
+    eng.repair(r0.dist, upd1)  # compile once; steady state is cache hits
+    t_e1 = fw_table1._time(lambda: eng.repair(r0.dist, upd1).dist, reps=3)
+    eng.repair(r0.dist, upd16)
+    t_e16 = fw_table1._time(lambda: eng.repair(r0.dist, upd16).dist, reps=3)
+    s = r0.block_size
+    rows.append(("fw_repair/full_resolve", f"n={n}", t_solve * 1e6,
+                 f"{n**3/t_solve/1e9:.2f}Gtasks/s"))
+    rows.append(("fw_repair/repair_e1", f"n={n}", t_e1 * 1e6,
+                 f"model={plan.repair_hbm_bytes(n, s, edges=1)/1e6:.1f}MB"))
+    rows.append(("fw_repair/repair_e16", f"n={n}", t_e16 * 1e6,
+                 f"model={plan.repair_hbm_bytes(n, s, edges=16)/1e6:.1f}MB"))
+    rows.append(("fw_repair/speedup", f"n={n}", t_solve / t_e1,
+                 f"target>=5x,e16={t_solve/t_e16:.1f}x"))
+    return rows
+
+
+SERVE_G, SERVE_N, SERVE_Q = 8, 256, 1200
+
+
+def bench_serve_qps():
+    """Mixed query/update serving load through the layered RoutingEngine.
+
+    One warm registry of G graphs; a load of path queries (a quarter via
+    the micro-batching scheduler) with an ⊕-improving edge update every 50
+    ops, so refreshes alternate between the rank-1 repair fast path and
+    full re-solves.  Rows are per-query latency percentiles (inline-query
+    wall time; scheduler-batched queries amortize and are excluded from
+    the percentiles) and sustained QPS; the derived column carries the
+    repair/solve refresh split.  Queries mid-refresh read the previous
+    published snapshot — consistency is asserted by the serve-smoke guard
+    (launch/fw_serve.py --smoke), this table records the speed.
+    """
+    from repro.launch.fw_serve import run_load
+
+    m = run_load(graphs=SERVE_G, n=SERVE_N, queries=SERVE_Q,
+                 update_every=50, method="auto", seed=0)
+    params = f"G={SERVE_G},n={SERVE_N}"
+    split = (f"repairs={m['repair_refreshes']},"
+             f"solves={m['solve_refreshes']},"
+             f"flushes={m['batched_flushes']}")
+    return [
+        ("serve_qps/qps", params, m["qps"],
+         f"{m['queries']}queries,{m['updates']}updates"),
+        ("serve_qps/p50_us", params, m["p50_us"], split),
+        ("serve_qps/p99_us", params, m["p99_us"],
+         f"max_batch_seen={m['max_seen_batch']}"),
+    ]
+
+
 TABLES = {
     "fw_table1": bench_fw_table1,
     "fw_scaling": bench_fw_scaling,
@@ -374,6 +458,8 @@ TABLES = {
     "kernel_sweep": bench_kernel_sweep,
     "fw_fused": bench_fw_fused,
     "fw_packed": bench_fw_packed,
+    "fw_repair": bench_fw_repair,
+    "serve_qps": bench_serve_qps,
 }
 
 
@@ -416,6 +502,16 @@ def expected_keys() -> dict[str, list[str]]:
             f"fw_packed/unpacked_f32[B=1,n={PACKED_N}]",
             f"fw_packed/packed_i32[B={PACKED_B},n={PACKED_N}]",
             f"fw_packed/per_graph_speedup[n={PACKED_N}]",
+        ],
+        "fw_repair": [
+            f"fw_repair/full_resolve[n={REPAIR_N}]",
+            f"fw_repair/repair_e1[n={REPAIR_N}]",
+            f"fw_repair/repair_e16[n={REPAIR_N}]",
+            f"fw_repair/speedup[n={REPAIR_N}]",
+        ],
+        "serve_qps": [
+            f"serve_qps/{k}[G={SERVE_G},n={SERVE_N}]"
+            for k in ("qps", "p50_us", "p99_us")
         ],
     }
 
@@ -465,6 +561,24 @@ def smoke() -> None:
                      f"unpacked per-graph solve on graph {i}")
     print("smoke: packed or_and closure == unpacked per-graph solves "
           "(B=5, bitwise)")
+
+    # The fw_repair guard: one rank-1 repair dispatch must reproduce the
+    # full re-solve of the updated graph bitwise (distances AND successors;
+    # the deeper per-semiring matrix lives in fw_serve --smoke and
+    # tests/test_fw_repair.py).
+    from repro.apsp import ApspEngine
+    from repro.launch.fw_serve import _apply_updates, repair_scenario
+
+    wr, upd, _ = repair_scenario("min_plus", 48, seed=4)
+    eng = ApspEngine(method="fused", validate=False)
+    r0 = eng.solve(wr, successors=True)
+    rep = eng.repair(r0.dist, upd, succ=r0.succ)
+    r1 = eng.solve(_apply_updates(wr, upd, "min_plus"), successors=True)
+    if not (np.array_equal(np.asarray(rep.dist), np.asarray(r1.dist),
+                           equal_nan=True)
+            and np.array_equal(np.asarray(rep.succ), np.asarray(r1.succ))):
+        sys.exit("smoke: rank-1 repair diverges from the full re-solve")
+    print("smoke: rank-1 repair == full re-solve (dist AND succ, bitwise)")
 
     if not os.path.exists(BENCH_JSON):
         sys.exit(f"smoke: {BENCH_JSON} missing — run the benchmarks first")

@@ -82,6 +82,7 @@ class PlanKey:
     batch_block: int | None
     successors: bool
     mesh: tuple | None = None
+    edges: int = 0  # repair entries: the padded edge-batch bucket E
 
 
 @dataclasses.dataclass
@@ -108,6 +109,8 @@ class EngineStats:
     misses: int = 0
     solves: int = 0
     graphs_solved: int = 0
+    repairs: int = 0         # rank-1 repair dispatches (ApspEngine.repair)
+    edges_repaired: int = 0  # real (unpadded) edge updates absorbed by them
 
 
 class ApspEngine:
@@ -438,6 +441,227 @@ class ApspEngine:
         self.stats.solves += len(buckets)
         self.stats.graphs_solved += len(arrs)
         return results  # type: ignore[return-value]
+
+    # -------------------------------------------------------------- repair
+    def repair(self, dist, updates, *, succ=None) -> APSPResult:
+        """Absorb a batch of ⊕-improving edge updates into a closed matrix.
+
+        dist: a (n, n) closure (a prior solve's output); updates: sequence
+        of ``(u, v, w)`` where ``w`` is the ⊕-delta merged into edge
+        (u, v) — the improved weight itself for the idempotent semirings,
+        the additive delta for plus_mul; succ: the matching next-hop table
+        to patch alongside (min-plus float only).
+
+        One fused rank-1 dispatch (``kernels.fw_repair``; its bitwise XLA
+        twin on CPU; a shard-mapped per-edge sweep on a mesh engine) —
+        O(E·n²) against the full solve's O(n³).  The result equals a full
+        re-solve of the updated graph exactly under the kernel's documented
+        conditions: ⊕-improving updates, closure diagonal = ⊗-identity
+        (lifted/restored automatically for plus_mul, whose FW convention
+        keeps a 0 diagonal; exact there only on DAGs), no optimal path
+        using one updated edge twice.  Edge *removals* / min-plus weight
+        increases are structural — re-solve instead
+        (``serve.registry`` classifies; ``should_repair`` is the cost
+        policy).
+
+        Edge batches pad to a power-of-two bucket with no-op edges
+        (u = v = 0, w = ⊕-identity), so the plan cache holds one
+        executable per (shape, bucket) rather than one per batch length.
+        """
+        sr = self.semiring
+        arr = _coerce(dist, sr, self.dtype)
+        packed_plane = "packed" in sr.name and arr.ndim == 3 and arr.shape[0] == 1
+        if packed_plane:
+            # A packed closure is (G, n, n) word planes; the rank-1 repair is
+            # per-plane (w is then the int32 lane mask of graphs gaining the
+            # edge).  Accept the common single-word case directly; multi-word
+            # sets repair plane-by-plane at the call site.
+            arr = arr[0]
+        if arr.ndim != 2 or arr.shape[0] != arr.shape[1]:
+            raise ValueError(f"repair expects a (n, n) closure, got {arr.shape}")
+        n = arr.shape[-1]
+        updates = list(updates)
+        if not updates:
+            raise ValueError("repair needs at least one (u, v, w) update")
+        if succ is not None:
+            if not _is_min_plus(sr):
+                raise ValueError(
+                    "successor repair is min_plus only (like every "
+                    "successor path)"
+                )
+            if jnp.dtype(arr.dtype).kind != "f":
+                raise ValueError(
+                    "successor repair needs a float distance table "
+                    "(the strict-< relaxation is not lowered for int16)"
+                )
+            if self.method == "distributed":
+                raise ValueError(
+                    "distributed repair is distance-only (like the "
+                    "distributed solve)"
+                )
+        E = len(updates)
+        E_pad = max(4, 1 << (E - 1).bit_length())
+        u = np.zeros(E_pad, np.int32)
+        v = np.zeros(E_pad, np.int32)
+        w = np.full(E_pad, sr.zero, jnp.dtype(arr.dtype).name)
+        for i, (ui, vi, wi) in enumerate(updates):
+            u[i], v[i], w[i] = ui, vi, wi
+        if self.method == "distributed":
+            meth, s, m = self._resolve_shape(n, False)
+        else:
+            s = self.block_size or plan.auto_block_size(n)
+            m = plan.padded_size(n, s)
+        key = PlanKey(
+            n_padded=m, batch=1, dtype=str(jnp.dtype(arr.dtype)),
+            semiring=sr.name,
+            method="repair_distributed" if self.method == "distributed"
+            else "repair",
+            block_size=s, bk=0, batch_block=None,
+            successors=succ is not None,
+            mesh=self._mesh_sig if self.method == "distributed" else None,
+            edges=E_pad,
+        )
+        entry = self._cache.get(key)
+        if entry is not None:
+            self.stats.hits += 1
+        else:
+            self.stats.misses += 1
+            entry = self._build_repair(key)
+            self._cache[key] = entry
+        dp = _pad(jnp.asarray(arr), m, sr)
+        if succ is None:
+            out = entry.runner(dp, u, v, w)
+            d2, s2 = out[..., :n, :n], None
+        else:
+            sp = jnp.full((m, m), -1, jnp.int32)
+            sp = sp.at[:n, :n].set(jnp.asarray(succ, jnp.int32))
+            d2, s2 = entry.runner(dp, sp, u, v, w)
+            d2, s2 = d2[..., :n, :n], s2[..., :n, :n]
+        if self.validate and _is_min_plus(sr):
+            _check_negative_cycles(d2, False)
+        self.stats.repairs += 1
+        self.stats.edges_repaired += E
+        if packed_plane:
+            d2 = d2[None]
+        return self._result(entry, d2, s2, n)
+
+    def should_repair(
+        self, n: int, pending_updates: int, *,
+        successors: bool = False, dtype=None, threshold: float = 0.5,
+    ) -> bool:
+        """The staleness/accumulated-delta policy: is a rank-1 repair still
+        cheaper than a full fused re-solve for this backlog?
+
+        Compares ``plan.repair_hbm_bytes`` for the accumulated edge count
+        against ``threshold ×`` the full solve's modeled traffic — past
+        the crossover (≈ threshold · n/s edges) the serving layer should
+        fall back to ``solve``, which also resets exactness drift from
+        any structural churn.
+        """
+        if pending_updates < 1:
+            return False
+        s = self.block_size or plan.auto_block_size(n)
+        word = jnp.dtype(
+            dtype if dtype is not None else self.dtype or jnp.float32
+        ).itemsize
+        cost = plan.repair_hbm_bytes(
+            n, s, word=word, edges=pending_updates, successors=successors
+        )
+        full = plan.fused_solve_hbm_bytes(n, s, word=word) * (
+            2 if successors else 1
+        )
+        return cost <= threshold * full
+
+    def _build_repair(self, key: PlanKey) -> ExecutablePlan:
+        """Construct the jitted repair runner for a cache key."""
+        sr = self.semiring
+        s, E = key.block_size, key.edges
+        interpret = self.interpret
+        lift = "plus_mul" in key.semiring  # FW keeps a 0 (⊕-id) diagonal
+        word = jnp.dtype(key.dtype).itemsize
+        entry = ExecutablePlan(key=key, runner=None)
+        entry.hbm_bytes_per_round = plan.repair_hbm_bytes(
+            key.n_padded, s, word=word, edges=E, successors=key.successors,
+        )
+
+        def _set_diag(d, val):
+            idx = jnp.arange(d.shape[-1])
+            return d.at[..., idx, idx].set(jnp.asarray(val, d.dtype))
+
+        if key.method == "repair_distributed":
+            from repro.core.distributed import build_repair_shard_fn
+
+            sharded, sharding = build_repair_shard_fn(
+                self.mesh, key.n_padded,
+                row_axes=self.row_axes, col_axes=self.col_axes,
+                semiring=sr, edges=E,
+            )
+
+            def traced_dist(dp, u, v, w):
+                entry.traces += 1
+                dg = jnp.diagonal(dp) if lift else None
+                if lift:
+                    dp = _set_diag(dp, sr.one)
+                out = sharded(dp, u, v, w)
+                if lift:
+                    idx = jnp.arange(out.shape[-1])
+                    out = out.at[..., idx, idx].set(dg)
+                return out
+
+            jitted = jax.jit(traced_dist)
+            entry.runner = lambda dp, u, v, w: jitted(
+                jax.device_put(dp, sharding), u, v, w
+            )
+            return entry
+
+        from repro.kernels.ops import default_interpret
+
+        use_ref = interpret is None and default_interpret()
+        if key.successors:
+            if use_ref:
+                from repro.kernels.ref import fw_repair_with_successors_ref
+
+                fn = lambda d, sc, u, v, w: fw_repair_with_successors_ref(
+                    d, sc, u, v, w
+                )
+            else:
+                from repro.kernels.fw_repair import fw_repair_with_successors
+
+                fn = lambda d, sc, u, v, w: fw_repair_with_successors(
+                    d, sc, u, v, w, block_size=s, interpret=interpret
+                )
+
+            def traced_succ(dp, sp, u, v, w):
+                entry.traces += 1
+                return fn(dp, sp, u, v, w)
+
+            entry.runner = jax.jit(traced_succ)
+            return entry
+
+        if use_ref:
+            from repro.kernels.ref import fw_repair_ref
+
+            fn = lambda d, u, v, w: fw_repair_ref(d, u, v, w, semiring=sr)
+        else:
+            from repro.kernels.fw_repair import fw_repair
+
+            fn = lambda d, u, v, w: fw_repair(
+                d, u, v, w, block_size=s, semiring=sr, interpret=interpret
+            )
+
+        def traced(dp, u, v, w):
+            entry.traces += 1
+            dg = jnp.diagonal(dp) if lift else None
+            if lift:
+                dp = _set_diag(dp, sr.one)
+            out = fn(dp, u, v, w)
+            if lift:
+                idx = jnp.arange(out.shape[-1])
+                out = out.at[..., idx, idx].set(dg)
+            return out
+
+        entry.runner = jax.jit(traced)
+        return entry
 
     # -------------------------------------------------------------- helpers
     def _run(self, entry: ExecutablePlan, wb, n: int):

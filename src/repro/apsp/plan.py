@@ -292,6 +292,27 @@ def fused_solve_hbm_bytes(
     )
 
 
+def repair_hbm_bytes(
+    n: int, s: int, *, word: int = 4, edges: int = 1,
+    successors: bool = False,
+) -> float:
+    """HBM traffic of ONE fused rank-1 repair dispatch
+    (``kernels.fw_repair``): E stage steps each read+write one (s, n) row
+    band (byte-identical copy-out — the write is the price of the
+    prefetch-safety rule), then T apply steps read+write every band once.
+    Successor tracking doubles it (distance + next-hop tables).
+
+    The repair-vs-resolve crossover the serving policy uses
+    (``ApspEngine.should_repair``): this is ~2·(E+T)·s·n words against
+    ``fused_solve_hbm_bytes``'s ~2·(n/s)·(T²+2T-1)·s² — repair wins by
+    roughly a factor of n/s per small edge batch, which is also the
+    measured ``fw_repair/speedup`` ladder in BENCH_fw.json.
+    """
+    m = padded_size(n, s)
+    bands = edges + m // s
+    return 2.0 * bands * s * m * word * (2 if successors else 1)
+
+
 def achieved_hbm_gbps(
     n: int, s: int, seconds: float, *, word: int = 4, batch: int = 1
 ) -> float:

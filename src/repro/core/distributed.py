@@ -364,6 +364,79 @@ def build_fw_shard_fn(
     return sharded, in_sharding
 
 
+def build_repair_shard_fn(
+    mesh: Mesh,
+    n: int,
+    *,
+    row_axes: Sequence[str] | str = "data",
+    col_axes: Sequence[str] | str = "model",
+    semiring: Semiring = MIN_PLUS,
+    edges: int,
+):
+    """Shard-mapped rank-1 repair over the mesh: (sharded_fn, in_sharding).
+
+    The distributed form of ``kernels.fw_repair``: the closure shards as in
+    ``build_fw_shard_fn`` ((n/R, n/C) block per device) and each of the
+    ``edges`` updates is one masked ⊕-broadcast pair — the owner row block
+    contributes the *current* pivot row v_e along the row axes, the owner
+    column block the current column u_e along the column axes (everyone
+    else the ⊕-identity, so the pmin/pmax/psum reduction IS the broadcast,
+    bit-exactly) — followed by the identical local elementwise chain
+    ``d ⊕= (d[:, u_e] ⊗ w_e) ⊗ d[v_e, :]``.  Because every device applies
+    the same per-element ⊕/⊗ chain to the same evolving values, the result
+    is bitwise equal to the single-device repair (tests/test_fw_repair.py,
+    8-virtual-device subprocess).
+
+    ``n`` must already be padded to the mesh multiple
+    (``plan.distributed_plan``); u/v index the padded matrix; weights
+    ride replicated in the matrix dtype.  Distance-only, like the
+    distributed solve.
+    """
+    row_t = (row_axes,) if isinstance(row_axes, str) else tuple(row_axes)
+    col_t = (col_axes,) if isinstance(col_axes, str) else tuple(col_axes)
+    R, C = _axis_size(mesh, row_t), _axis_size(mesh, col_t)
+    if n % R or n % C:
+        raise ValueError(f"n={n} must divide over the {R}x{C} mesh grid")
+    nr, nc = n // R, n // C
+    zero = semiring.zero
+
+    def _bcast(x, axes):
+        if semiring.add is jnp.minimum:
+            return jax.lax.pmin(x, axes)
+        if semiring.add is jnp.maximum:
+            return jax.lax.pmax(x, axes)
+        return jax.lax.psum(x, axes)  # PLUS_MUL / packed: zero = 0
+
+    def local_fn(dl, u, v, w):
+        my_r, my_c = _my_index(row_t), _my_index(col_t)
+
+        def body(e, dl):
+            ue, ve = u[e], v[e]
+            we = jax.lax.dynamic_index_in_dim(w, e, keepdims=False)
+            own_c = ue // nc
+            col = jax.lax.dynamic_slice(dl, (0, ue - own_c * nc), (nr, 1))
+            col = jnp.where(my_c == own_c, col, jnp.full_like(col, zero))
+            col = _bcast(col, col_t)
+            own_r = ve // nr
+            row = jax.lax.dynamic_slice(dl, (ve - own_r * nr, 0), (1, nc))
+            row = jnp.where(my_r == own_r, row, jnp.full_like(row, zero))
+            row = _bcast(row, row_t)
+            cand = semiring.mul(semiring.mul(col, we), row)
+            return semiring.add(dl, cand)
+
+        return jax.lax.fori_loop(0, edges, body, dl)
+
+    dims = (
+        row_t if len(row_t) > 1 else row_t[0],
+        col_t if len(col_t) > 1 else col_t[0],
+    )
+    spec = P(*dims)
+    sharded = _shard_map(
+        local_fn, mesh=mesh, in_specs=(spec, P(), P(), P()), out_specs=spec,
+    )
+    return sharded, NamedSharding(mesh, spec)
+
+
 def fw_distributed(
     w: np.ndarray | jax.Array,
     mesh: Mesh,

@@ -165,6 +165,29 @@ def extract_path(succ: np.ndarray, src: int, dst: int, max_len: int | None = Non
     return path
 
 
+def _lift_distances(a: np.ndarray) -> np.ndarray:
+    """Lowered-storage tables → float64 with real ±inf sentinels.
+
+    The serving layer may cache distance tables in their storage lowering
+    (min_plus_i16 saturating int16 with ±32767 sentinels, bf16 weights);
+    the host-side walk below needs IEEE semantics — int16 "infinity" is
+    finite to numpy and wraps under +, and bf16 is an ml_dtypes extension
+    type some numpy builds can't reduce over.  Map sentinels to ±inf and
+    compute in float64.
+    """
+    a = np.asarray(a)
+    if a.dtype.kind in "iu":
+        from repro.core.semiring import I16_INF, I16_NINF
+
+        out = a.astype(np.float64)
+        out[a == I16_INF] = np.inf
+        out[a == I16_NINF] = -np.inf
+        return out
+    if a.dtype.kind == "f" and a.dtype.itemsize >= 4:
+        return a
+    return a.astype(np.float64)  # bf16 / f16
+
+
 def extract_path_from_dist(
     w: np.ndarray, dist: np.ndarray, src: int, dst: int,
     *, max_len: int | None = None,
@@ -177,11 +200,12 @@ def extract_path_from_dist(
     equals dist[u, dst] on a shortest path.  O(path length · n) numpy; the
     argmin (rather than an exact-equality test) tolerates the float
     re-association between the closure's reduction order and this sum.
-    Returns [] when dst is unreachable or no path materializes within
-    ``max_len`` hops.
+    Accepts lowered-storage tables (int16 saturating sentinels, bf16) —
+    they lift to float for the walk.  Returns [] when dst is unreachable
+    or no path materializes within ``max_len`` hops.
     """
-    w = np.asarray(w)
-    dist = np.asarray(dist)
+    w = _lift_distances(w)
+    dist = _lift_distances(dist)
     if not np.isfinite(dist[src, dst]):
         return []
     path = [src]
@@ -206,7 +230,7 @@ def extract_path_from_dist(
 
 def path_cost(w: np.ndarray, path: list[int]) -> float:
     """Sum of edge weights along ``path`` in the original adjacency matrix."""
-    w = np.asarray(w)
+    w = _lift_distances(w)
     if not path:
         return float("inf")
     return float(sum(w[a, b] for a, b in zip(path, path[1:])))

@@ -308,3 +308,71 @@ def flash_decode_ref(
     logits = jnp.where(mask[None, None, None, :], logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fw_repair_ref(
+    d: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    *,
+    semiring: Semiring = MIN_PLUS,
+) -> jax.Array:
+    """Execution-grade XLA twin of ``kernels.fw_repair.fw_repair``.
+
+    The direct sequential form: edge e applies the rank-1 repair
+    ``d ⊕= (d[:, u_e] ⊗ w_e) ⊗ d[v_e, :]`` to the *whole* matrix before
+    edge e+1 runs.  The kernel's two-phase (stage pivot rows through
+    scratch, then sweep bands) evaluation performs the identical
+    per-element ⊕/⊗ chain, so the two are bitwise equal on every semiring
+    lowering (tests/test_fw_repair.py).  Batch-rank-agnostic over leading
+    dims.
+    """
+    d = jnp.asarray(d)
+    u = jnp.asarray(u, jnp.int32)
+    v = jnp.asarray(v, jnp.int32)
+    w = jnp.asarray(w, d.dtype)
+
+    def body(e, d):
+        we = jax.lax.dynamic_index_in_dim(w, e, keepdims=False)
+        du = jax.lax.dynamic_slice_in_dim(d, u[e], 1, axis=-1)  # (..., n, 1)
+        dv = jax.lax.dynamic_slice_in_dim(d, v[e], 1, axis=-2)  # (..., 1, n)
+        cand = semiring.mul(semiring.mul(du, we), dv)
+        return semiring.add(d, cand)
+
+    return jax.lax.fori_loop(0, u.shape[0], body, d)
+
+
+def fw_repair_with_successors_ref(
+    d: jax.Array,
+    succ: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """XLA twin of ``fw_repair_with_successors`` (min-plus, 2-D only).
+
+    Strict-improvement relaxation matching ``core.paths``: an improved
+    (i, j) takes first hop v_e when i == u_e (the path starts with the
+    updated edge itself) and the cached ``succ[i, u_e]`` otherwise.
+    """
+    d = jnp.asarray(d)
+    succ = jnp.asarray(succ, jnp.int32)
+    u = jnp.asarray(u, jnp.int32)
+    v = jnp.asarray(v, jnp.int32)
+    w = jnp.asarray(w, d.dtype)
+    ridx = jnp.arange(d.shape[0], dtype=jnp.int32)[:, None]
+
+    def body(e, carry):
+        d, sc = carry
+        ue, ve = u[e], v[e]
+        we = jax.lax.dynamic_index_in_dim(w, e, keepdims=False)
+        du = jax.lax.dynamic_slice_in_dim(d, ue, 1, axis=1)   # (n, 1)
+        dv = jax.lax.dynamic_slice_in_dim(d, ve, 1, axis=0)   # (1, n)
+        cand = (du + we) + dv
+        better = cand < d
+        su = jax.lax.dynamic_slice_in_dim(sc, ue, 1, axis=1)  # (n, 1)
+        hop = jnp.where(ridx == ue, ve, su)
+        return jnp.where(better, cand, d), jnp.where(better, hop, sc)
+
+    return jax.lax.fori_loop(0, u.shape[0], body, (d, succ))

@@ -14,6 +14,10 @@ verifies the distributed solve.  Exit code 0 on success.  Modes:
                    non-divisible n (e.g. --n 96).
   --method engine  route a ragged batch through ApspEngine(mesh=...).
                    solve_many + assert the warm cache retraces nothing.
+  --repair         distributed ApspEngine.repair (the shard-mapped rank-1
+                   per-edge sweep) == single-device repair == full re-solve,
+                   bitwise, per --semiring/--dtype (+ --packed lanes);
+                   warm repair cache must not retrace.
   --bench          time the per-round dispatch and measure the collective
                    bytes in the compiled per-round HLO against the SUMMA
                    model (plan.dist_round_comm_bytes /
@@ -74,13 +78,18 @@ def main() -> int:
     ap.add_argument("--pods", type=int, default=1)
     ap.add_argument("--semiring", default="min_plus")
     ap.add_argument("--dtype", default="float32",
-                    choices=["float32", "bfloat16"])
+                    choices=["float32", "bfloat16", "int16"])
     ap.add_argument("--method", default="direct",
                     choices=["direct", "solve", "engine"])
     ap.add_argument("--batch", type=int, default=1,
                     help="solve mode: close B graphs through one sharded batch")
     ap.add_argument("--bitwise", action="store_true",
                     help="compare against the single-device fused solve, bitwise")
+    ap.add_argument("--repair", action="store_true",
+                    help="distributed ApspEngine.repair == single-device "
+                         "repair == full re-solve, bitwise")
+    ap.add_argument("--packed", action="store_true",
+                    help="repair mode: bit-packed or_and int32 lanes")
     ap.add_argument("--bench", action="store_true",
                     help="emit METRICS json (per-round ms + comm bytes)")
     ap.add_argument("--chunked", action="store_true", help="exercise checkpoint chunking")
@@ -111,7 +120,8 @@ def main() -> int:
     dtype = jnp.dtype(args.dtype)
     R, C = plan.mesh_factorization(args.devices, args.pods)
 
-    w = jnp.asarray(_graph_for(args.semiring, args.n, seed=0), dtype)
+    if not args.repair:  # repair mode builds its own per-scenario inputs
+        w = jnp.asarray(_graph_for(args.semiring, args.n, seed=0), dtype)
     if args.batch > 1:
         # (--bitwise too: the naive oracle of the default mode is not
         # batch-aware, so the only meaningful batched check is the bitwise
@@ -122,6 +132,67 @@ def main() -> int:
             jnp.asarray(_graph_for(args.semiring, args.n, seed=i), dtype)
             for i in range(args.batch)
         ])
+
+    if args.repair:
+        # Distributed rank-1 repair (core.distributed.build_repair_shard_fn,
+        # a shard-mapped per-edge ⊕-broadcast sweep) must reproduce BOTH the
+        # single-device repair and a full re-solve of the updated graph,
+        # bitwise — per semiring, storage lowering, and the packed planes.
+        from repro.apsp import pack_reachability
+        from repro.core.semiring import I16_INF
+        from repro.launch.fw_serve import _apply_updates, repair_scenario
+
+        if args.packed:
+            rng = np.random.default_rng(9)
+            Bs = rng.uniform(size=(2, args.n, args.n)) < 0.05
+            Bs[:, np.arange(args.n), np.arange(args.n)] = True
+            w0 = np.asarray(pack_reachability(Bs.astype(np.float32)))
+            upd = [(3, 7, 1 << 0), (args.n - 8, 9, 0b11)]
+            B1 = Bs.copy()
+            B1[0, 3, 7] = True
+            B1[:, args.n - 8, 9] = True
+            w1 = np.asarray(pack_reachability(B1.astype(np.float32)))
+            kw = dict(semiring="or_and", packed=True, validate=False)
+            baseline = "fused"
+        elif args.dtype == "int16":
+            assert args.semiring == "min_plus", "int16 repair: min_plus only"
+            rng = np.random.default_rng(1)
+            w0 = rng.integers(1, 997, (args.n, args.n)).astype(np.int16)
+            w0[rng.uniform(size=(args.n, args.n)) > 0.4] = I16_INF
+            np.fill_diagonal(w0, 0)
+            upd = [(3, 7, 1), (10, 2, 2)]
+            w1 = w0.copy()
+            for u_, v_, d_ in upd:
+                w1[u_, v_] = min(int(w1[u_, v_]), d_)
+            # dtype pins the saturating int16 lowering at construction —
+            # without it the engine promotes int inputs to f32.
+            kw = dict(semiring=sr, dtype=jnp.int16, validate=False)
+            baseline = "fused"
+        else:
+            w0, upd, baseline = repair_scenario(args.semiring, args.n)
+            w1 = _apply_updates(w0, upd, args.semiring)
+            kw = dict(semiring=sr, validate=False)
+        single = ApspEngine(method=baseline, **kw)
+        dist = ApspEngine(method="distributed", mesh=mesh, row_axes=row_axes,
+                          **kw)
+        r0 = single.solve(w0)
+        rs = np.asarray(single.repair(r0.dist, upd).dist)
+        rd = np.asarray(dist.repair(r0.dist, upd).dist)
+        want = np.asarray(single.solve(w1).dist)
+        if not np.array_equal(rd, rs, equal_nan=True):
+            print("FAIL distributed repair != single-device repair",
+                  file=sys.stderr)
+            return 1
+        if not np.array_equal(rs, want, equal_nan=True):
+            print("FAIL repair != full re-solve", file=sys.stderr)
+            return 1
+        dist.repair(r0.dist, upd)  # warm pass: no retrace
+        traces = [e.traces for e in dist._cache.values()]
+        assert all(t == 1 for t in traces), f"repair cache retraced: {traces}"
+        print(f"OK repair devices={ndev} mesh={dict(mesh.shape)} n={args.n} "
+              f"semiring={args.semiring} dtype={args.dtype} "
+              f"packed={args.packed} edges={len(upd)}")
+        return 0
 
     if args.bench:
         dp = plan.distributed_plan(args.n, args.devices, grid=(R, C),

@@ -1,0 +1,326 @@
+"""Serving load generator + smoke guard for the layered APSP serving stack.
+
+Usage: PYTHONPATH=src python -m repro.launch.fw_serve [--graphs 8] [--n 256]
+           [--queries 2000] [--update-every 50]
+       PYTHONPATH=src python -m repro.launch.fw_serve --smoke
+
+Default mode drives a mixed query/update load through ``serve.routing
+.RoutingEngine``: G registered graphs, mostly path queries (some through the
+micro-batching scheduler), an ⊕-improving ``update_edge`` every
+``--update-every`` queries so refreshes alternate between the rank-1 repair
+fast path and full re-solves.  Reports per-query p50/p99 latency and QPS,
+and prints a ``METRICS {json}`` line ``benchmarks.run`` parses into
+``BENCH_fw.json`` (the ``serve_qps/*`` ladder).
+
+``--smoke`` is the CI guard (.github/workflows/ci.yml serve-smoke):
+
+  * bitwise repair-vs-resolve across all five semirings + the int16 and
+    bit-packed lowerings (``repair_scenario`` below builds per-semiring
+    inputs satisfying the repair kernel's exactness conditions);
+  * successor-table repair == re-solve on tie-free weights;
+  * snapshot consistency mid-refresh (a reader's snapshot is immutable
+    across a racing publish);
+  * a mini load-gen pass through the scheduler;
+  * BENCH_fw.json key-manifest diff for the ``serve_qps/*`` +
+    ``fw_repair/*`` ladders.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def repair_scenario(semiring: str, n: int, seed: int = 0):
+    """Per-semiring (W, updates, baseline_method) satisfying repair exactness.
+
+    The constructions mirror the repair kernel's documented conditions
+    (kernels/fw_repair.py): updates are ⊕-improvements, and for the
+    non-idempotent plus_mul the graph is a DAG (strict upper triangle) with
+    additive deltas and path counts far below f32's 2^24 integer range.
+    ``baseline_method`` is the solve method whose closure the repair must
+    reproduce bitwise — "naive" for plus_mul because the blocked/fused
+    pivot-block re-relaxation over-counts under a non-idempotent ⊕ (only
+    plain FW equals the true path-sum closure there).
+    """
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    if semiring == "min_plus":
+        # Tie-free: large random integer weights make shortest paths unique
+        # with overwhelming probability → successor tables compare bitwise.
+        w = rng.integers(1, 10**6, (n, n)).astype(np.float32)
+        w[rng.uniform(size=(n, n)) > 0.4] = np.inf
+        np.fill_diagonal(w, 0.0)
+        upd = [(3, 7, 5.0), (n // 2, 2, 3.0), (1, n - 2, 17.0)]
+        return w, upd, "fused"
+    if semiring == "max_plus":
+        # Longest path needs a DAG; improvements increase edge weights.
+        w = np.full((n, n), -np.inf, np.float32)
+        iu = np.triu_indices(n, 1)
+        mask = rng.uniform(size=len(iu[0])) < 0.3
+        w[iu[0][mask], iu[1][mask]] = rng.integers(1, 100, mask.sum()).astype(
+            np.float32
+        )
+        np.fill_diagonal(w, 0.0)
+        upd = [(3, n // 2, 500.0), (1, n - 2, 400.0)]
+        return w, upd, "fused"
+    if semiring == "max_min":
+        # Widest path: diagonal is the ⊗-identity +inf; capacity increases.
+        w = rng.integers(1, 100, (n, n)).astype(np.float32)
+        w[rng.uniform(size=(n, n)) > 0.4] = -np.inf
+        np.fill_diagonal(w, np.inf)
+        upd = [(3, 7, 1000.0), (n // 2, 2, 900.0)]
+        return w, upd, "fused"
+    if semiring == "or_and":
+        w = (rng.uniform(size=(n, n)) < 0.05).astype(np.float32)
+        np.fill_diagonal(w, 1.0)
+        upd = [(3, 7, 1.0), (n - 2, 9, 1.0)]
+        return w, upd, "fused"
+    if semiring == "plus_mul":
+        # Sparse strict-upper DAG with unit weights: the closure counts
+        # paths (small integers); updates are additive edge deltas.
+        w = np.zeros((n, n), np.float32)
+        iu = np.triu_indices(n, 1)
+        mask = rng.uniform(size=len(iu[0])) < 0.08
+        w[iu[0][mask], iu[1][mask]] = 1.0
+        np.fill_diagonal(w, 0.0)
+        upd = [(3, n // 2, 1.0), (1, n - 2, 1.0)]
+        return w, upd, "naive"
+    raise ValueError(f"no repair scenario for semiring {semiring!r}")
+
+
+def _apply_updates(w, updates, semiring: str):
+    """The updated weight matrix a full re-solve should close."""
+    import numpy as np
+
+    from repro.core.semiring import SEMIRINGS
+
+    sr = SEMIRINGS[semiring]
+    w1 = np.array(w, copy=True)
+    for u, v, d in updates:
+        w1[u, v] = sr.add(np.asarray(w1[u, v]), np.asarray(d, w1.dtype))
+    return w1
+
+
+def smoke() -> int:
+    import numpy as np
+
+    from repro.apsp import ApspEngine, pack_reachability
+    from repro.core.semiring import I16_INF
+
+    n = 48
+    # 1) bitwise repair == re-solve, all five semirings (f32).
+    for name in ("min_plus", "max_plus", "max_min", "or_and", "plus_mul"):
+        w, upd, baseline = repair_scenario(name, n)
+        eng = ApspEngine(method=baseline, semiring=name, validate=False)
+        r0 = eng.solve(w)
+        rep = eng.repair(r0.dist, upd)
+        r1 = eng.solve(_apply_updates(w, upd, name))
+        if not np.array_equal(np.asarray(rep.dist), np.asarray(r1.dist),
+                              equal_nan=True):
+            print(f"FAIL repair != resolve for {name}", file=sys.stderr)
+            return 1
+    print("smoke: repair == re-solve bitwise (5 semirings, f32)")
+
+    # 2) int16 storage lowering (dtype pins it — else ints promote to f32).
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(1)
+    wi = rng.integers(1, 997, (n, n)).astype(np.int16)
+    wi[rng.uniform(size=(n, n)) > 0.4] = I16_INF
+    np.fill_diagonal(wi, 0)
+    eng = ApspEngine(method="fused", semiring="min_plus", dtype=jnp.int16,
+                     validate=False)
+    r0 = eng.solve(wi)
+    upd = [(3, 7, 1), (10, 2, 2)]
+    rep = eng.repair(r0.dist, upd)
+    w1 = wi.copy()
+    for u, v, d in upd:
+        w1[u, v] = min(int(w1[u, v]), d)
+    r1 = eng.solve(w1)
+    if not np.array_equal(np.asarray(rep.dist), np.asarray(r1.dist)):
+        print("FAIL int16 repair != resolve", file=sys.stderr)
+        return 1
+    print("smoke: repair == re-solve bitwise (min_plus int16)")
+
+    # 3) bit-packed or_and: an update (u, v, mask) adds edge u→v in the
+    # graphs whose int32 bit lanes are set in ``mask``.
+    rng = np.random.default_rng(9)
+    Bs = rng.uniform(size=(2, n, n)) < 0.05
+    Bs[:, np.arange(n), np.arange(n)] = True
+    peng = ApspEngine(method="fused", semiring="or_and", packed=True,
+                      validate=False)
+    p0 = peng.solve(np.asarray(pack_reachability(Bs.astype(np.float32))))
+    # edge 3→7 in lane 0 only; edge 40→9 in both lanes
+    rep = peng.repair(p0.dist, [(3, 7, 1 << 0), (40, 9, 0b11)])
+    B1 = Bs.copy()
+    B1[0, 3, 7] = True
+    B1[:, 40, 9] = True
+    p1 = peng.solve(np.asarray(pack_reachability(B1.astype(np.float32))))
+    if not np.array_equal(np.asarray(rep.dist), np.asarray(p1.dist)):
+        print("FAIL packed repair != resolve", file=sys.stderr)
+        return 1
+    print("smoke: repair == re-solve bitwise (packed or_and)")
+
+    # 4) successor-table repair (tie-free weights → bitwise).
+    w, upd, _ = repair_scenario("min_plus", n, seed=2)
+    eng = ApspEngine(method="fused", validate=False)
+    r0 = eng.solve(w, successors=True)
+    rep = eng.repair(r0.dist, upd, succ=r0.succ)
+    r1 = eng.solve(_apply_updates(w, upd, "min_plus"), successors=True)
+    if not (np.array_equal(np.asarray(rep.dist), np.asarray(r1.dist),
+                           equal_nan=True)
+            and np.array_equal(np.asarray(rep.succ), np.asarray(r1.succ))):
+        print("FAIL successor repair != resolve", file=sys.stderr)
+        return 1
+    print("smoke: successor repair == re-solve bitwise (dist AND succ)")
+
+    # 5) snapshot consistency mid-refresh + a mini scheduler pass.
+    from repro.serve.routing import RoutingEngine
+
+    w, upd, _ = repair_scenario("min_plus", 32, seed=3)
+    router = RoutingEngine(method="naive")
+    router.add_graph("g", w)
+    router.refresh()
+    held = router.snapshots.active("g")
+    held_dist = held.dist.copy()
+    router.update_edge("g", *upd[0])
+    router.query("g", 0, 5)  # auto_refresh publishes a new snapshot
+    if not (held.version == 1
+            and np.array_equal(held.dist, held_dist)
+            and router.snapshots.active("g").version == 2):
+        print("FAIL mid-refresh snapshot mutated", file=sys.stderr)
+        return 1
+    tickets = [router.submit("g", 0, d) for d in range(1, 6)]
+    replies = [t.result() for t in tickets]
+    if router.batcher.flushes != 1 or len(replies) != 5:
+        print("FAIL scheduler flush", file=sys.stderr)
+        return 1
+    print("smoke: snapshots consistent mid-refresh; scheduler flushed 5-in-1")
+
+    # 6) BENCH_fw.json manifest diff for the serving ladders.
+    repo = os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))))
+    bench = os.path.join(repo, "BENCH_fw.json")
+    if not os.path.exists(bench):
+        print(f"FAIL {bench} missing — run the benchmarks first",
+              file=sys.stderr)
+        return 1
+    sys.path.insert(0, repo)
+    from benchmarks.run import expected_keys
+
+    with open(bench) as f:
+        have = set(json.load(f))
+    want = set(expected_keys()["fw_repair"]) | set(
+        expected_keys()["serve_qps"]
+    )
+    missing = sorted(want - have)
+    for k in missing:
+        print(f"FAIL missing benchmark entry {k!r}", file=sys.stderr)
+    if missing:
+        return 1
+    print(f"smoke: BENCH_fw.json has all {len(want)} serving-ladder keys")
+    return 0
+
+
+def run_load(
+    *,
+    graphs: int = 8,
+    n: int = 256,
+    queries: int = 2000,
+    update_every: int = 50,
+    scheduler_share: float = 0.25,
+    max_batch: int = 16,
+    method: str = "auto",
+    seed: int = 0,
+) -> dict:
+    """Drive a mixed query/update load; returns the metrics dict.
+
+    Every ``update_every``-th operation merges an ⊕-improving edge update
+    into a random graph, so the next query of that graph pays a refresh —
+    a rank-1 repair while the backlog is small (``should_repair``), a full
+    re-solve otherwise.  ``scheduler_share`` of queries go through the
+    micro-batcher (``submit`` + ``poll``); the rest are inline ``query``
+    calls, individually timed for the latency percentiles.
+    """
+    import numpy as np
+
+    from repro.serve.routing import RoutingEngine
+
+    rng = np.random.default_rng(seed)
+    router = RoutingEngine(method=method, max_batch=max_batch)
+    for i in range(graphs):
+        w, _, _ = repair_scenario("min_plus", n, seed=seed + i)
+        router.add_graph(f"g{i}", w)
+    router.refresh()  # one bucketed batched solve; load runs warm
+
+    lat_us: list[float] = []
+    updates = 0
+    t_start = time.perf_counter()
+    for op in range(queries):
+        gid = f"g{rng.integers(graphs)}"
+        if update_every and op and op % update_every == 0:
+            u, v = rng.integers(n, size=2)
+            router.update_edge(gid, int(u), int(v), float(rng.integers(1, 100)))
+            updates += 1
+            continue
+        src, dst = rng.integers(n, size=2)
+        if rng.uniform() < scheduler_share:
+            router.submit(gid, int(src), int(dst))
+            router.poll()
+            continue
+        t0 = time.perf_counter()
+        router.query(gid, int(src), int(dst))
+        lat_us.append((time.perf_counter() - t0) * 1e6)
+    router.batcher.flush()
+    wall = time.perf_counter() - t_start
+    served = queries - updates
+    lat = np.asarray(lat_us)
+    return dict(
+        graphs=graphs, n=n, queries=served, updates=updates,
+        wall_s=wall, qps=served / wall,
+        p50_us=float(np.percentile(lat, 50)),
+        p99_us=float(np.percentile(lat, 99)),
+        repair_refreshes=router.repair_refreshes,
+        solve_refreshes=router.solve_refreshes,
+        batched_flushes=router.batcher.flushes,
+        max_seen_batch=router.batcher.max_seen_batch,
+        engine_solves=router.engine.stats.solves,
+        engine_repairs=router.engine.stats.repairs,
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=8)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--update-every", type=int, default=50)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--method", default="auto")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI guard: bitwise repair checks + BENCH key diff")
+    args = ap.parse_args()
+    if args.smoke:
+        return smoke()
+    metrics = run_load(
+        graphs=args.graphs, n=args.n, queries=args.queries,
+        update_every=args.update_every, max_batch=args.max_batch,
+        method=args.method, seed=args.seed,
+    )
+    print("METRICS " + json.dumps(metrics))
+    print(f"OK serve graphs={args.graphs} n={args.n} "
+          f"qps={metrics['qps']:.0f} p50={metrics['p50_us']:.0f}us "
+          f"p99={metrics['p99_us']:.0f}us "
+          f"repairs={metrics['repair_refreshes']} "
+          f"solves={metrics['solve_refreshes']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,405 +1,29 @@
-"""Serving engines: LM generation and APSP shortest-path routing.
+"""Back-compat shim — the serving stack is now a layered package.
 
-Two session objects live here:
+The monolithic ``serve/engine.py`` split into:
 
-  * ``Engine`` — batched prefill + lockstep greedy/temperature decode for
-    the LM stack (jitted prefill/decode with their cache shardings,
-    sequence-sharded KV → split-K distributed decode, DESIGN.md §6).
-  * ``RoutingEngine`` — the paper-side serving scenario: many users
-    querying shortest paths over many (mutating) graphs.  It fronts an
-    ``repro.apsp.ApspEngine`` session: graph registration marks tables
-    dirty, ``refresh()`` re-solves *all* dirty graphs in one bucketed
-    batched solve (distances + successor matrices through the fused round
-    kernel's batch grid), and queries are O(path length) host-side walks
-    over the cached successor tables — no per-query device work at all.
+    serve/lm.py         LM ``Engine`` + ``make_serve_fns``/``cache_pspecs``
+    serve/registry.py   graph weights, memory accounting/LRU, dirty kinds
+    serve/snapshot.py   double-buffered dist+succ snapshot store
+    serve/scheduler.py  micro-batching query scheduler (max-batch/max-wait)
+    serve/routing.py    public ``RoutingEngine`` (thin composition)
+
+Import from those modules directly; this shim keeps the old
+``from repro.serve.engine import RoutingEngine, Engine`` spelling working
+(mirroring the ``apsp/solver.py`` shim pattern).
 """
-from __future__ import annotations
+from repro.serve.lm import (  # noqa: F401
+    Engine,
+    _params_bytes,
+    cache_pspecs,
+    make_serve_fns,
+)
+from repro.serve.routing import RouteReply, RoutingEngine  # noqa: F401
 
-import dataclasses
-import functools
-from typing import Any, Iterable
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from repro.configs.base import ModelConfig
-from repro.models.model import decode_step, init_cache, prefill
-from repro.train.train_step import mesh_axes, param_pspecs
-from repro.utils import sharding as shd
-
-
-def cache_pspecs(cfg: ModelConfig, cache_shapes: Any, mesh: Mesh, batch: int):
-    """Sequence-sharded cache specs; batch over DP when divisible (the
-    long_500k batch=1 cell shards sequence over *all* axes instead)."""
-    axes = mesh_axes(mesh)
-    dp_size = 1
-    for a in axes.dp:
-        dp_size *= mesh.shape[a]
-    batch_shardable = batch % dp_size == 0
-    bspec = axes.dp_spec if batch_shardable else None
-    sspec = axes.tp if batch_shardable else (axes.dp + (axes.tp,))
-
-    def _div(size, spec):
-        """spec only if the dim divides evenly over its mesh axes."""
-        if spec is None:
-            return None
-        names = (spec,) if isinstance(spec, str) else spec
-        prod = 1
-        for nm in names:
-            prod *= mesh.shape[nm]
-        return spec if size % prod == 0 else None
-
-    def one(path, leaf):
-        name = str(getattr(path[-1], "key", ""))
-        # leaves: (periods, B, S, ...) for kv; (periods, B, ...) for states
-        if name in ("k", "v", "c_kv", "k_pe", "ck", "cv"):
-            # ck/cv context lengths (1601 image tokens / 1500 frames) are
-            # not 16-divisible → replicated seq, batch-sharded only.
-            return P(None, _div(leaf.shape[1], bspec),
-                     _div(leaf.shape[2], sspec), *(None,) * (leaf.ndim - 3))
-        if name == "ssm":  # (periods, B, H, N, Pd)
-            return P(None, bspec, None, axes.tp if not batch_shardable else None, None)
-        if name == "conv":  # (periods, B, w, C)
-            return P(None, bspec, None, axes.tp)
-        return P(*(None,) * leaf.ndim)
-
-    return jax.tree_util.tree_map_with_path(one, cache_shapes)
-
-
-def _params_bytes(shapes) -> int:
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(shapes):
-        n = 1
-        for d in leaf.shape:
-            n *= d
-        total += n * jnp.dtype(leaf.dtype).itemsize
-    return total
-
-
-def make_serve_fns(cfg: ModelConfig, mesh: Mesh, *, batch: int, max_seq: int,
-                   weight_stationary: bool | None = None):
-    """Returns dict with jit-ready fns + shardings for dry-run and serving.
-
-    weight_stationary (§Perf, decode): FSDP-sharded params force an
-    all-gather of every layer's weights per decode step (kimi: 178 GB/chip/
-    step).  When the pure-TP shard fits comfortably (≤4 GiB/chip), serving
-    re-shards params to TP-only — weights stay put, no per-step gathers.
-    None = auto by size.
-    """
-    axes = mesh_axes(mesh)
-
-    def prefill_fn(params, batch_d):
-        with shd.axis_ctx(axes):
-            return prefill(cfg, params, batch_d)
-
-    def decode_fn(params, token, pos, caches):
-        with shd.axis_ctx(axes):
-            return decode_step(cfg, params, token, pos, caches)
-
-    from repro.models.model import init_params
-
-    shapes = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
-    pspecs = param_pspecs(cfg, shapes, mesh)
-    if weight_stationary is None:
-        tp_shard = _params_bytes(shapes) / mesh.shape[axes.tp]
-        weight_stationary = tp_shard <= 4 * 2 ** 30
-    if weight_stationary:
-        # Drop the DP (fsdp) axis from every param spec → TP-only layout.
-        def drop_dp(spec: P) -> P:
-            dp = set(axes.dp)
-            def keep(e):
-                if e is None:
-                    return None
-                names = (e,) if isinstance(e, str) else tuple(e)
-                kept = tuple(n for n in names if n not in dp)
-                return kept[0] if len(kept) == 1 else (kept or None)
-            return P(*(keep(e) for e in spec))
-
-        pspecs = jax.tree.map(drop_dp, pspecs, is_leaf=lambda x: isinstance(x, P))
-    ns = lambda s: NamedSharding(mesh, s)
-    param_sh = jax.tree.map(ns, pspecs)
-
-    cache_shapes = jax.eval_shape(
-        functools.partial(init_cache, cfg, batch, max_seq)
-    )
-    cache_sh = jax.tree.map(ns, cache_pspecs(cfg, cache_shapes, mesh, batch))
-
-    dp_size = 1
-    for a in axes.dp:
-        dp_size *= mesh.shape[a]
-    bspec = axes.dp_spec if batch % dp_size == 0 else None
-    tok_sh = ns(P(bspec))
-    logits_sh = ns(P(bspec, axes.tp))
-    return {
-        "prefill": prefill_fn,
-        "decode": decode_fn,
-        "param_sh": param_sh,
-        "cache_sh": cache_sh,
-        "tok_sh": tok_sh,
-        "logits_sh": logits_sh,
-        "cache_shapes": cache_shapes,
-    }
-
-
-class Engine:
-    """Host-side generation loop (single-process; examples/serve driver)."""
-
-    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 256,
-                 temperature: float = 0.0, seed: int = 0):
-        self.cfg, self.params = cfg, params
-        self.max_seq = max_seq
-        self.temperature = temperature
-        self.key = jax.random.key(seed)
-        self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b))
-        self._decode = jax.jit(lambda p, t, pos, c: decode_step(cfg, p, t, pos, c))
-
-    def _extend_caches(self, caches, extra: int):
-        def ext(path, leaf):
-            name = str(getattr(path[-1], "key", ""))
-            if name in ("k", "v", "c_kv", "k_pe"):
-                pad = [(0, 0)] * leaf.ndim
-                pad[2] = (0, extra)
-                return jnp.pad(leaf, pad)
-            return leaf
-
-        return jax.tree_util.tree_map_with_path(ext, caches)
-
-    def generate(self, batch: dict, *, max_new_tokens: int = 32) -> np.ndarray:
-        tokens = batch["tokens"]
-        b, s = tokens.shape
-        logits, caches = self._prefill(self.params, batch)
-        caches = self._extend_caches(caches, max_new_tokens)
-        out = []
-        tok = self._sample(logits)
-        out.append(tok)
-        for i in range(max_new_tokens - 1):
-            logits, caches = self._decode(self.params, tok, jnp.int32(s + i), caches)
-            tok = self._sample(logits)
-            out.append(tok)
-        return np.stack([np.asarray(t) for t in out], axis=1)
-
-    def _sample(self, logits: jax.Array) -> jax.Array:
-        logits = logits[..., : self.cfg.vocab_size]  # mask padded classes
-        if self.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, k = jax.random.split(self.key)
-        return jax.random.categorical(k, logits / self.temperature, axis=-1).astype(
-            jnp.int32
-        )
-
-
-# --------------------------------------------------------------------------
-# APSP shortest-path serving (the paper's routing-table scenario)
-# --------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class RouteReply:
-    """One answered shortest-path query."""
-
-    graph_id: str
-    src: int
-    dst: int
-    path: list[int]          # [] when dst is unreachable from src
-    cost: float              # +inf when unreachable
-
-    @property
-    def reachable(self) -> bool:
-        return bool(self.path)
-
-
-@dataclasses.dataclass
-class _RoutingTable:
-    """Solved state for one registered graph: distances + next hops.
-
-    succ is None when the refresh ran distance-only (distributed meshes);
-    queries then reconstruct hops from dist + the adjacency matrix.
-    """
-
-    dist: np.ndarray
-    succ: np.ndarray | None
-    version: int
-
-
-class RoutingEngine:
-    """Serve shortest-path queries over many graphs via one ``ApspEngine``.
-
-        router = RoutingEngine()
-        router.add_graph("dc-east", w_east)
-        router.add_graph("dc-west", w_west)
-        router.refresh()                       # ONE bucketed batched solve
-        reply = router.query("dc-east", 12, 17)
-
-    The serving contract: graph mutations (``add_graph`` / ``update_graph``)
-    only mark tables dirty; ``refresh()`` re-solves every dirty graph in a
-    single ``ApspEngine.solve_many`` call — ragged sizes bucket into padded
-    batches and each bucket runs the fused round kernel's native batch grid
-    with successor tracking.  Queries never touch the device: they walk the
-    cached successor matrix on the host (O(path length)).  ``query`` on a
-    stale graph raises unless ``auto_refresh`` (the default) is on.
-
-    ``mesh=`` shards the refresh across a device mesh: the engine runs
-    method="distributed" (the fused bordered round per device — graphs too
-    big for one device, or many graphs amortizing the collective), the
-    refresh caches *distances only* (the distributed round does not track
-    successors), and queries reconstruct hops host-side from dist + the
-    adjacency matrix (``core.paths.extract_path_from_dist``, O(path·n)).
-    """
-
-    def __init__(
-        self,
-        *,
-        engine=None,
-        method: str = "auto",
-        block_size: int | None = None,
-        interpret: bool | None = None,
-        auto_refresh: bool = True,
-        mesh=None,
-        row_axes="data",
-        col_axes="model",
-    ):
-        """engine: a pre-built ApspEngine (overrides every other knob).
-        method/block_size/interpret: forwarded to the owned ApspEngine.
-        mesh/row_axes/col_axes: serve over a device mesh (see class doc).
-        auto_refresh: stale graphs re-solve on first read instead of
-        raising."""
-        from repro.apsp import ApspEngine
-
-        if engine is None:
-            if mesh is not None:
-                engine = ApspEngine(
-                    method="distributed", block_size=block_size,
-                    interpret=interpret, mesh=mesh,
-                    row_axes=row_axes, col_axes=col_axes,
-                )
-            else:
-                engine = ApspEngine(
-                    method=method, block_size=block_size, interpret=interpret,
-                )
-        self.engine = engine
-        self.auto_refresh = auto_refresh
-        self._graphs: dict[str, np.ndarray] = {}
-        self._tables: dict[str, _RoutingTable] = {}
-        self._dirty: list[str] = []  # insertion-ordered; drives batching
-        self._version = 0
-
-    # ------------------------------------------------------------- registry
-    def add_graph(self, graph_id: str, w) -> None:
-        """Register (or replace) a graph; its tables become stale.
-
-        The matrix is copied: later in-place mutation of the caller's array
-        cannot desynchronize the registry from the solved tables — graph
-        changes go through ``update_graph``/``fail_link`` so they mark the
-        tables dirty.
-        """
-        w = np.array(w, copy=True)
-        if w.ndim != 2 or w.shape[0] != w.shape[1]:
-            raise ValueError(f"graph {graph_id!r} must be (n,n), got {w.shape}")
-        w.flags.writeable = False
-        self._graphs[graph_id] = w
-        if graph_id not in self._dirty:
-            self._dirty.append(graph_id)
-
-    update_graph = add_graph
-
-    def fail_link(self, graph_id: str, u: int, v: int, *, symmetric=True) -> None:
-        """Serving-side mutation: remove edge(s) and mark the graph dirty."""
-        w = self._graphs[graph_id].copy()
-        w[u, v] = np.inf
-        if symmetric:
-            w[v, u] = np.inf
-        self.add_graph(graph_id, w)
-
-    def remove_graph(self, graph_id: str) -> None:
-        self._graphs.pop(graph_id, None)
-        self._tables.pop(graph_id, None)
-        if graph_id in self._dirty:
-            self._dirty.remove(graph_id)
-
-    @property
-    def graph_ids(self) -> list[str]:
-        return list(self._graphs)
-
-    @property
-    def dirty_count(self) -> int:
-        return len(self._dirty)
-
-    # -------------------------------------------------------------- solving
-    def refresh(self) -> int:
-        """Re-solve every dirty graph in ONE bucketed batched solve.
-
-        Returns the number of graphs refreshed.  Distances and successor
-        matrices are pulled to the host once here so queries are pure
-        numpy walks.
-        """
-        if not self._dirty:
-            return 0
-        ids = list(self._dirty)
-        # Distributed refreshes are distance-only (no successor tracking in
-        # the bordered round); queries fall back to dist-based hop walks.
-        use_succ = self.engine.method != "distributed"
-        results = self.engine.solve_many(
-            [self._graphs[g] for g in ids], successors=use_succ
-        )
-        self._version += 1
-        for gid, res in zip(ids, results):
-            dist = np.asarray(res.dist)
-            succ = np.asarray(res.succ) if res.succ is not None else None
-            # Read-only: distances()/query() hand these out; a caller must
-            # not be able to corrupt the cache in place.
-            for a in (dist,) if succ is None else (dist, succ):
-                a.flags.writeable = False
-            self._tables[gid] = _RoutingTable(
-                dist=dist, succ=succ, version=self._version,
-            )
-        self._dirty.clear()
-        return len(ids)
-
-    # -------------------------------------------------------------- queries
-    def _fresh_table(self, graph_id: str) -> _RoutingTable:
-        """The staleness contract shared by every read path: a dirty graph
-        refreshes under ``auto_refresh`` and raises otherwise."""
-        if graph_id not in self._graphs:
-            raise KeyError(f"unknown graph {graph_id!r}")
-        if graph_id in self._dirty:
-            if not self.auto_refresh:
-                raise RuntimeError(
-                    f"graph {graph_id!r} is stale; call refresh()"
-                )
-            self.refresh()
-        return self._tables[graph_id]
-
-    def query(self, graph_id: str, src: int, dst: int) -> RouteReply:
-        """Shortest path + cost from the cached routing table.
-
-        src/dst: vertex indices into the registered graph.  Successor
-        tables give an O(path length) walk; distance-only tables (mesh
-        serving) reconstruct each hop from dist + adjacency instead.
-        """
-        from repro.core.paths import extract_path, extract_path_from_dist
-
-        table = self._fresh_table(graph_id)
-        if table.succ is not None:
-            path = extract_path(table.succ, src, dst)
-        else:
-            path = extract_path_from_dist(
-                self._graphs[graph_id], table.dist, src, dst
-            )
-        cost = float(table.dist[src, dst])
-        return RouteReply(
-            graph_id=graph_id, src=src, dst=dst, path=path, cost=cost
-        )
-
-    def query_many(
-        self, requests: Iterable[tuple[str, int, int]]
-    ) -> list[RouteReply]:
-        """Answer a request batch; at most one refresh for all of them."""
-        requests = list(requests)
-        if self.auto_refresh and any(g in self._dirty for g, _, _ in requests):
-            self.refresh()
-        return [self.query(g, s, d) for g, s, d in requests]
-
-    def distances(self, graph_id: str) -> np.ndarray:
-        """The cached (refreshing if stale) distance matrix of one graph."""
-        return self._fresh_table(graph_id).dist
+__all__ = [
+    "Engine",
+    "cache_pspecs",
+    "make_serve_fns",
+    "RouteReply",
+    "RoutingEngine",
+]

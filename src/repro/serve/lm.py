@@ -1,0 +1,183 @@
+"""LM serving: batched prefill + lockstep decode for the language-model stack.
+
+``Engine`` is the host-side generation session (jitted prefill/decode with
+their cache shardings, sequence-sharded KV → split-K distributed decode,
+DESIGN.md §6); ``make_serve_fns`` builds the jit-ready fns + shardings the
+dry-run and serving drivers share.  The APSP routing side of serving lives
+in the sibling modules (``repro.serve.routing`` and friends) — this module
+is the LM half of what used to be the monolithic ``serve/engine.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import decode_step, init_cache, prefill
+from repro.train.train_step import mesh_axes, param_pspecs
+from repro.utils import sharding as shd
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shapes: Any, mesh: Mesh, batch: int):
+    """Sequence-sharded cache specs; batch over DP when divisible (the
+    long_500k batch=1 cell shards sequence over *all* axes instead)."""
+    axes = mesh_axes(mesh)
+    dp_size = 1
+    for a in axes.dp:
+        dp_size *= mesh.shape[a]
+    batch_shardable = batch % dp_size == 0
+    bspec = axes.dp_spec if batch_shardable else None
+    sspec = axes.tp if batch_shardable else (axes.dp + (axes.tp,))
+
+    def _div(size, spec):
+        """spec only if the dim divides evenly over its mesh axes."""
+        if spec is None:
+            return None
+        names = (spec,) if isinstance(spec, str) else spec
+        prod = 1
+        for nm in names:
+            prod *= mesh.shape[nm]
+        return spec if size % prod == 0 else None
+
+    def one(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        # leaves: (periods, B, S, ...) for kv; (periods, B, ...) for states
+        if name in ("k", "v", "c_kv", "k_pe", "ck", "cv"):
+            # ck/cv context lengths (1601 image tokens / 1500 frames) are
+            # not 16-divisible → replicated seq, batch-sharded only.
+            return P(None, _div(leaf.shape[1], bspec),
+                     _div(leaf.shape[2], sspec), *(None,) * (leaf.ndim - 3))
+        if name == "ssm":  # (periods, B, H, N, Pd)
+            return P(None, bspec, None, axes.tp if not batch_shardable else None, None)
+        if name == "conv":  # (periods, B, w, C)
+            return P(None, bspec, None, axes.tp)
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def _params_bytes(shapes) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(shapes):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def make_serve_fns(cfg: ModelConfig, mesh: Mesh, *, batch: int, max_seq: int,
+                   weight_stationary: bool | None = None):
+    """Returns dict with jit-ready fns + shardings for dry-run and serving.
+
+    weight_stationary (§Perf, decode): FSDP-sharded params force an
+    all-gather of every layer's weights per decode step (kimi: 178 GB/chip/
+    step).  When the pure-TP shard fits comfortably (≤4 GiB/chip), serving
+    re-shards params to TP-only — weights stay put, no per-step gathers.
+    None = auto by size.
+    """
+    axes = mesh_axes(mesh)
+
+    def prefill_fn(params, batch_d):
+        with shd.axis_ctx(axes):
+            return prefill(cfg, params, batch_d)
+
+    def decode_fn(params, token, pos, caches):
+        with shd.axis_ctx(axes):
+            return decode_step(cfg, params, token, pos, caches)
+
+    from repro.models.model import init_params
+
+    shapes = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    pspecs = param_pspecs(cfg, shapes, mesh)
+    if weight_stationary is None:
+        tp_shard = _params_bytes(shapes) / mesh.shape[axes.tp]
+        weight_stationary = tp_shard <= 4 * 2 ** 30
+    if weight_stationary:
+        # Drop the DP (fsdp) axis from every param spec → TP-only layout.
+        def drop_dp(spec: P) -> P:
+            dp = set(axes.dp)
+            def keep(e):
+                if e is None:
+                    return None
+                names = (e,) if isinstance(e, str) else tuple(e)
+                kept = tuple(n for n in names if n not in dp)
+                return kept[0] if len(kept) == 1 else (kept or None)
+            return P(*(keep(e) for e in spec))
+
+        pspecs = jax.tree.map(drop_dp, pspecs, is_leaf=lambda x: isinstance(x, P))
+    ns = lambda s: NamedSharding(mesh, s)
+    param_sh = jax.tree.map(ns, pspecs)
+
+    cache_shapes = jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq)
+    )
+    cache_sh = jax.tree.map(ns, cache_pspecs(cfg, cache_shapes, mesh, batch))
+
+    dp_size = 1
+    for a in axes.dp:
+        dp_size *= mesh.shape[a]
+    bspec = axes.dp_spec if batch % dp_size == 0 else None
+    tok_sh = ns(P(bspec))
+    logits_sh = ns(P(bspec, axes.tp))
+    return {
+        "prefill": prefill_fn,
+        "decode": decode_fn,
+        "param_sh": param_sh,
+        "cache_sh": cache_sh,
+        "tok_sh": tok_sh,
+        "logits_sh": logits_sh,
+        "cache_shapes": cache_shapes,
+    }
+
+
+class Engine:
+    """Host-side generation loop (single-process; examples/serve driver)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 256,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.key(seed)
+        self._prefill = jax.jit(lambda p, b: prefill(cfg, p, b))
+        self._decode = jax.jit(lambda p, t, pos, c: decode_step(cfg, p, t, pos, c))
+
+    def _extend_caches(self, caches, extra: int):
+        def ext(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name in ("k", "v", "c_kv", "k_pe"):
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, extra)
+                return jnp.pad(leaf, pad)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(ext, caches)
+
+    def generate(self, batch: dict, *, max_new_tokens: int = 32) -> np.ndarray:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        logits, caches = self._prefill(self.params, batch)
+        caches = self._extend_caches(caches, max_new_tokens)
+        out = []
+        tok = self._sample(logits)
+        out.append(tok)
+        for i in range(max_new_tokens - 1):
+            logits, caches = self._decode(self.params, tok, jnp.int32(s + i), caches)
+            tok = self._sample(logits)
+            out.append(tok)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        logits = logits[..., : self.cfg.vocab_size]  # mask padded classes
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(k, logits / self.temperature, axis=-1).astype(
+            jnp.int32
+        )

@@ -1,0 +1,196 @@
+"""Graph registry: the serving layer's source-of-truth weight store.
+
+One ``GraphRegistry`` owns every registered adjacency matrix plus three
+pieces of bookkeeping the rest of ``repro.serve`` composes around:
+
+  * **memory accounting** — per-graph bytes (weights + the solved tables
+    the routing layer reports back via ``note_table_bytes``) and a running
+    total, with optional ``capacity_bytes`` LRU eviction.  Eviction drops a
+    graph's *solved tables* (the re-creatable part) and marks it
+    structurally dirty; the weights — the irreducible source of truth —
+    always stay.
+  * **dirty classification** — an *edge-delta* dirty graph accumulated only
+    ⊕-improving single-edge updates since its last solve, so a refresh may
+    absorb them with the O(E·n²) rank-1 repair (``ApspEngine.repair``).
+    A *structurally* dirty graph saw a replacement, an edge removal, or a
+    ⊕-worsening — repair's exactness conditions are gone and only a full
+    re-solve is sound.  Any structural event clears the pending delta list:
+    deltas are relative to the last *solved* table, which the structural
+    change invalidates wholesale.
+  * **LRU order** — reads ``touch()`` a graph; eviction walks the
+    least-recently-used end first and never evicts a dirty graph's place in
+    line before its tables exist.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeUpdate:
+    """One ⊕-improving edge update pending against a solved table.
+
+    ``w`` follows ``ApspEngine.repair`` semantics: the improved weight
+    itself for the idempotent semirings, the additive ⊕-delta for plus_mul,
+    the int32 lane mask for packed or_and.
+    """
+
+    u: int
+    v: int
+    w: float
+
+    def as_tuple(self) -> tuple[int, int, float]:
+        return (self.u, self.v, self.w)
+
+
+# Dirty kinds (see module docstring).
+DELTA = "delta"
+STRUCTURAL = "structural"
+
+
+class GraphRegistry:
+    """Weight store + memory accounting + dirty classification (no solving)."""
+
+    def __init__(self, *, capacity_bytes: int | None = None):
+        self.capacity_bytes = capacity_bytes
+        self._graphs: dict[str, "np.ndarray"] = {}
+        self._table_bytes: dict[str, int] = {}
+        # dict preserves insertion order → doubles as the LRU list
+        # (move_to_end semantics via pop + re-insert in touch()).
+        self._lru: dict[str, None] = {}
+        self._dirty: dict[str, str] = {}  # gid -> DELTA | STRUCTURAL
+        self._deltas: dict[str, list[EdgeUpdate]] = {}
+        self.evictions = 0
+
+    # ------------------------------------------------------------- weights
+    def put(self, graph_id: str, w) -> None:
+        """Register or replace a graph's weights (a structural event).
+
+        The matrix is copied and frozen: later in-place mutation of the
+        caller's array cannot desynchronize the registry from the solved
+        tables — changes go through the routing layer's mutators so they
+        are classified.
+        """
+        import numpy as np
+
+        w = np.array(w, copy=True)
+        if w.ndim not in (2, 3) or w.shape[-1] != w.shape[-2]:
+            raise ValueError(f"graph {graph_id!r} must be (n,n), got {w.shape}")
+        w.flags.writeable = False
+        self._graphs[graph_id] = w
+        self.touch(graph_id)
+        self.mark_structural(graph_id)
+
+    def replace_weights(self, graph_id: str, w) -> None:
+        """Swap weights *without* touching dirty state — for the routing
+        layer applying an already-classified edge mutation in place."""
+        import numpy as np
+
+        w = np.array(w, copy=True)
+        w.flags.writeable = False
+        self._graphs[graph_id] = w
+
+    def get(self, graph_id: str):
+        """The (read-only) weight matrix; counts as a use for LRU."""
+        if graph_id not in self._graphs:
+            raise KeyError(f"unknown graph {graph_id!r}")
+        self.touch(graph_id)
+        return self._graphs[graph_id]
+
+    def peek(self, graph_id: str):
+        """``get`` without the LRU touch (internal bookkeeping reads)."""
+        if graph_id not in self._graphs:
+            raise KeyError(f"unknown graph {graph_id!r}")
+        return self._graphs[graph_id]
+
+    def __contains__(self, graph_id: str) -> bool:
+        return graph_id in self._graphs
+
+    def remove(self, graph_id: str) -> None:
+        self._graphs.pop(graph_id, None)
+        self._table_bytes.pop(graph_id, None)
+        self._lru.pop(graph_id, None)
+        self._dirty.pop(graph_id, None)
+        self._deltas.pop(graph_id, None)
+
+    def ids(self) -> list[str]:
+        return list(self._graphs)
+
+    # ---------------------------------------------------------------- dirty
+    def mark_structural(self, graph_id: str) -> None:
+        """Replacement / removal / ⊕-worsening: full re-solve required."""
+        self._dirty[graph_id] = STRUCTURAL
+        self._deltas.pop(graph_id, None)
+
+    def mark_edge_delta(self, graph_id: str, u: int, v: int, w) -> None:
+        """Accumulate one ⊕-improving update; stays delta-dirty unless the
+        graph is already structurally dirty (structural wins)."""
+        if self._dirty.get(graph_id) == STRUCTURAL:
+            return
+        self._dirty[graph_id] = DELTA
+        self._deltas.setdefault(graph_id, []).append(EdgeUpdate(u, v, w))
+
+    def dirty_kind(self, graph_id: str) -> str | None:
+        """DELTA, STRUCTURAL, or None when the graph is clean."""
+        return self._dirty.get(graph_id)
+
+    def pending_deltas(self, graph_id: str) -> list[EdgeUpdate]:
+        return list(self._deltas.get(graph_id, ()))
+
+    def clear_dirty(self, graph_id: str) -> None:
+        self._dirty.pop(graph_id, None)
+        self._deltas.pop(graph_id, None)
+
+    def dirty_ids(self) -> list[str]:
+        """Insertion-ordered dirty set; drives refresh batching."""
+        return list(self._dirty)
+
+    @property
+    def dirty_count(self) -> int:
+        return len(self._dirty)
+
+    # --------------------------------------------------------------- memory
+    def touch(self, graph_id: str) -> None:
+        self._lru.pop(graph_id, None)
+        self._lru[graph_id] = None
+
+    def note_table_bytes(self, graph_id: str, nbytes: int) -> None:
+        """The routing layer reports solved-table footprint after publish."""
+        self._table_bytes[graph_id] = int(nbytes)
+
+    def graph_bytes(self, graph_id: str) -> int:
+        """Weights + solved tables for one graph."""
+        w = self._graphs.get(graph_id)
+        return (w.nbytes if w is not None else 0) + self._table_bytes.get(
+            graph_id, 0
+        )
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.graph_bytes(g) for g in self._graphs)
+
+    def evict_over_capacity(self, *, keep: set[str] | None = None) -> list[str]:
+        """LRU-evict solved tables until under ``capacity_bytes``.
+
+        Returns the evicted graph ids — the caller (routing layer) must
+        drop their snapshots.  Each evicted graph is marked structurally
+        dirty so a later query re-solves it; weights are never dropped, so
+        the floor is the sum of registered weight matrices.  ``keep``
+        shields graphs refreshed *this* cycle — evicting a table the
+        caller is about to read would thrash; they join the normal LRU
+        order for the next cycle.
+        """
+        if self.capacity_bytes is None:
+            return []
+        keep = keep or set()
+        evicted: list[str] = []
+        for gid in list(self._lru):
+            if self.total_bytes <= self.capacity_bytes:
+                break
+            if gid in keep or self._table_bytes.get(gid, 0) == 0:
+                continue  # shielded, or nothing re-creatable to free
+            self._table_bytes.pop(gid, None)
+            self.mark_structural(gid)
+            evicted.append(gid)
+            self.evictions += 1
+        return evicted

@@ -1,0 +1,330 @@
+"""``RoutingEngine``: the public APSP serving session, a thin composition.
+
+Layers (one file each, composed here and only here):
+
+    GraphRegistry   (registry.py)   weights, memory/LRU, dirty classification
+    SnapshotStore   (snapshot.py)   double-buffered dist+succ tables
+    MicroBatcher    (scheduler.py)  max-batch/max-wait query batching
+    ApspEngine      (repro.apsp)    the device work: solve_many / repair
+
+The serving contract: mutations only mark tables dirty; ``refresh()``
+brings the dirty set current — structurally dirty graphs re-solve in ONE
+bucketed batched ``solve_many``, edge-delta dirty graphs absorb their
+pending updates with the O(E·n²) rank-1 ``repair`` when the
+``should_repair`` cost model says it beats a re-solve.  Fresh tables stage
+into the snapshot back buffer and publish atomically, so queries — pure
+host-side successor walks — always read a consistent table, even mid-
+refresh.  ``query`` on a stale graph refreshes *that graph only* (under
+``auto_refresh``; raises otherwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+from repro.serve import registry as _registry
+from repro.serve.registry import GraphRegistry
+from repro.serve.scheduler import MicroBatcher, PendingQuery, Ticket
+from repro.serve.snapshot import Snapshot, SnapshotStore
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteReply:
+    """One answered shortest-path query."""
+
+    graph_id: str
+    src: int
+    dst: int
+    path: list[int]          # [] when dst is unreachable from src
+    cost: float              # +inf when unreachable
+
+    @property
+    def reachable(self) -> bool:
+        return bool(self.path)
+
+
+class RoutingEngine:
+    """Serve shortest-path queries over many graphs via one ``ApspEngine``.
+
+        router = RoutingEngine()
+        router.add_graph("dc-east", w_east)
+        router.add_graph("dc-west", w_west)
+        router.refresh()                       # ONE bucketed batched solve
+        router.update_edge("dc-east", 3, 7, 0.5)   # ⊕-improvement → repair
+        reply = router.query("dc-east", 12, 17)
+
+    Mutations classify (``registry.GraphRegistry``): ``update_edge`` with an
+    ⊕-improving weight accumulates an edge delta, so the next refresh of
+    that graph is one fused rank-1 repair dispatch instead of an O(n³)
+    re-solve; replacements (``add_graph``), removals (``fail_link``), and
+    ⊕-worsenings (``set_edge``) are structural and re-solve.  Queries never
+    touch the device: they walk the cached successor matrix on the host
+    (O(path length)) off an immutable published snapshot
+    (``snapshot.SnapshotStore``).  ``submit()``/``poll()`` push queries
+    through the micro-batching scheduler instead of answering inline.
+
+    ``mesh=`` shards refreshes across a device mesh: the engine runs
+    method="distributed" (the fused bordered round per device — graphs too
+    big for one device, or many graphs amortizing the collective), the
+    refresh caches *distances only* (the distributed round does not track
+    successors; repairs go through the shard-mapped per-edge sweep), and
+    queries reconstruct hops host-side from dist + the adjacency matrix
+    (``core.paths.extract_path_from_dist``, O(path·n)).
+    """
+
+    def __init__(
+        self,
+        *,
+        engine=None,
+        method: str = "auto",
+        block_size: int | None = None,
+        interpret: bool | None = None,
+        auto_refresh: bool = True,
+        mesh=None,
+        row_axes="data",
+        col_axes="model",
+        capacity_bytes: int | None = None,
+        max_batch: int = 32,
+        max_wait_s: float = 0.002,
+        repair_threshold: float = 0.5,
+        clock=None,
+    ):
+        """engine: a pre-built ApspEngine (overrides every other solve knob).
+        method/block_size/interpret: forwarded to the owned ApspEngine.
+        mesh/row_axes/col_axes: serve over a device mesh (see class doc).
+        auto_refresh: stale graphs re-solve on first read instead of
+        raising.  capacity_bytes: LRU-evict solved tables past this
+        footprint (weights always stay).  max_batch/max_wait_s: the
+        ``submit()`` micro-batching policy.  repair_threshold: forwarded to
+        ``ApspEngine.should_repair`` — the fraction of a full solve's
+        modeled HBM traffic a repair may cost before refresh falls back to
+        re-solving.  clock: injectable monotonic clock for the scheduler."""
+        from repro.apsp import ApspEngine
+
+        if engine is None:
+            if mesh is not None:
+                engine = ApspEngine(
+                    method="distributed", block_size=block_size,
+                    interpret=interpret, mesh=mesh,
+                    row_axes=row_axes, col_axes=col_axes,
+                )
+            else:
+                engine = ApspEngine(
+                    method=method, block_size=block_size, interpret=interpret,
+                )
+        self.engine = engine
+        self.auto_refresh = auto_refresh
+        self.repair_threshold = repair_threshold
+        self.registry = GraphRegistry(capacity_bytes=capacity_bytes)
+        self.snapshots = SnapshotStore()
+        kw = {} if clock is None else {"clock": clock}
+        self.batcher = MicroBatcher(
+            self._flush_batch, max_batch=max_batch, max_wait_s=max_wait_s, **kw
+        )
+        self.repair_refreshes = 0
+        self.solve_refreshes = 0
+
+    # ------------------------------------------------------------- registry
+    def add_graph(self, graph_id: str, w) -> None:
+        """Register (or replace) a graph; its tables become structurally
+        stale (a replacement invalidates any pending edge deltas)."""
+        self.registry.put(graph_id, w)
+
+    update_graph = add_graph
+
+    def update_edge(
+        self, graph_id: str, u: int, v: int, w, *, symmetric: bool = False
+    ) -> bool:
+        """Merge one edge update ``w`` under ⊕ (repair semantics: the
+        improved weight for idempotent semirings, the additive delta for
+        plus_mul).  Because the merge is ``old ⊕ w``, this path can only
+        *improve* the edge — so the graph goes edge-delta dirty and the
+        next refresh may use the rank-1 repair.  Returns whether anything
+        changed (``old ⊕ w == old`` is a no-op).  Worsen or remove an edge
+        with ``set_edge`` / ``fail_link`` (structural)."""
+        sr = self.engine.semiring
+        wm = np.array(self.registry.peek(graph_id), copy=True)
+        changed = False
+        for i, j in ((u, v), (v, u)) if symmetric else ((u, v),):
+            old = wm[..., i, j]
+            new = np.asarray(sr.add(old, np.asarray(w, wm.dtype)))
+            if np.array_equal(new, old):
+                continue
+            wm[..., i, j] = new
+            self.registry.mark_edge_delta(graph_id, i, j, w)
+            changed = True
+        if changed:
+            self.registry.replace_weights(graph_id, wm)
+        return changed
+
+    def set_edge(
+        self, graph_id: str, u: int, v: int, w, *, symmetric: bool = False
+    ) -> None:
+        """Force-assign an edge weight (may worsen) — structural dirty."""
+        wm = np.array(self.registry.peek(graph_id), copy=True)
+        wm[..., u, v] = w
+        if symmetric:
+            wm[..., v, u] = w
+        self.registry.replace_weights(graph_id, wm)
+        self.registry.mark_structural(graph_id)
+
+    def fail_link(self, graph_id: str, u: int, v: int, *, symmetric=True) -> None:
+        """Serving-side mutation: remove edge(s) and mark the graph dirty."""
+        self.set_edge(graph_id, u, v, np.inf, symmetric=symmetric)
+
+    def remove_graph(self, graph_id: str) -> None:
+        self.registry.remove(graph_id)
+        self.snapshots.drop(graph_id)
+
+    @property
+    def graph_ids(self) -> list[str]:
+        return self.registry.ids()
+
+    @property
+    def dirty_count(self) -> int:
+        return self.registry.dirty_count
+
+    # -------------------------------------------------------------- solving
+    def refresh(self, graph_ids: Iterable[str] | None = None) -> int:
+        """Bring dirty graphs current; returns how many were refreshed.
+
+        graph_ids: restrict to these graphs (clean ones in the list are
+        skipped; None = the whole dirty set).  Structurally dirty graphs
+        re-solve in ONE bucketed ``solve_many``; edge-delta dirty graphs
+        with a published snapshot go through ``ApspEngine.repair`` when
+        ``should_repair`` says the backlog is still cheaper than a
+        re-solve.  All fresh tables stage first and publish together at
+        the end — queries racing a refresh read the old consistent
+        snapshots until the atomic swap.
+        """
+        dirty = self.registry.dirty_ids()
+        if graph_ids is not None:
+            want = set(graph_ids)
+            dirty = [g for g in dirty if g in want]
+        if not dirty:
+            return 0
+        from repro.core.semiring import MIN_PLUS
+
+        # Successor tables exist only for the strict-< min_plus relaxation
+        # on float storage; lowered/non-tropical engines (and the
+        # distributed round) serve dist-only snapshots and reconstruct
+        # hops host-side via extract_path_from_dist.
+        use_succ = (
+            self.engine.method != "distributed"
+            and self.engine.semiring is MIN_PLUS
+        )
+        repair_ids: list[str] = []
+        solve_ids: list[str] = []
+        for gid in dirty:
+            snap = self.snapshots.active(gid)
+            deltas = self.registry.pending_deltas(gid)
+            if (
+                self.registry.dirty_kind(gid) == _registry.DELTA
+                and snap is not None
+                and deltas
+                and self.engine.should_repair(
+                    snap.dist.shape[-1], len(deltas),
+                    successors=snap.succ is not None,
+                    dtype=snap.dist.dtype,
+                    threshold=self.repair_threshold,
+                )
+            ):
+                repair_ids.append(gid)
+            else:
+                solve_ids.append(gid)
+        if solve_ids:
+            results = self.engine.solve_many(
+                [self.registry.peek(g) for g in solve_ids], successors=use_succ
+            )
+            for gid, res in zip(solve_ids, results):
+                self.snapshots.stage(
+                    gid, np.asarray(res.dist),
+                    None if res.succ is None else np.asarray(res.succ),
+                )
+            self.solve_refreshes += len(solve_ids)
+        for gid in repair_ids:
+            snap = self.snapshots.active(gid)
+            updates = [e.as_tuple() for e in self.registry.pending_deltas(gid)]
+            res = self.engine.repair(snap.dist, updates, succ=snap.succ)
+            self.snapshots.stage(
+                gid, np.asarray(res.dist),
+                None if res.succ is None else np.asarray(res.succ),
+            )
+            self.repair_refreshes += 1
+        # Atomic cutover: every staged table publishes only now, after all
+        # device work finished — a reader mid-refresh saw old tables only.
+        for gid in dirty:
+            snap = self.snapshots.publish(gid)
+            self.registry.note_table_bytes(gid, snap.nbytes)
+            self.registry.clear_dirty(gid)
+            self.registry.touch(gid)
+        for gid in self.registry.evict_over_capacity(keep=set(dirty)):
+            self.snapshots.drop(gid)
+        return len(dirty)
+
+    # -------------------------------------------------------------- queries
+    def _fresh_snapshot(self, graph_id: str) -> Snapshot:
+        """The staleness contract shared by every read path: a dirty graph
+        refreshes (that graph ONLY) under ``auto_refresh`` and raises
+        otherwise."""
+        if graph_id not in self.registry:
+            raise KeyError(f"unknown graph {graph_id!r}")
+        if self.registry.dirty_kind(graph_id) is not None:
+            if not self.auto_refresh:
+                raise RuntimeError(
+                    f"graph {graph_id!r} is stale; call refresh()"
+                )
+            self.refresh([graph_id])
+        return self.snapshots.active(graph_id)
+
+    def query(self, graph_id: str, src: int, dst: int) -> RouteReply:
+        """Shortest path + cost from the published snapshot.
+
+        src/dst: vertex indices into the registered graph.  Successor
+        tables give an O(path length) walk; distance-only tables (mesh
+        serving) reconstruct each hop from dist + adjacency instead.
+        """
+        from repro.core.paths import extract_path, extract_path_from_dist
+
+        snap = self._fresh_snapshot(graph_id)
+        if snap.succ is not None:
+            path = extract_path(snap.succ, src, dst)
+        else:
+            path = extract_path_from_dist(
+                self.registry.get(graph_id), snap.dist, src, dst
+            )
+        cost = float(snap.dist[src, dst])
+        return RouteReply(
+            graph_id=graph_id, src=src, dst=dst, path=path, cost=cost
+        )
+
+    def query_many(
+        self, requests: Iterable[tuple[str, int, int]]
+    ) -> list[RouteReply]:
+        """Answer a request batch; at most one refresh for all of them —
+        and only of the graphs the batch actually touches."""
+        requests = list(requests)
+        if self.auto_refresh:
+            touched = {g for g, _, _ in requests}
+            if any(self.registry.dirty_kind(g) is not None for g in touched):
+                self.refresh(touched)
+        return [self.query(g, s, d) for g, s, d in requests]
+
+    def distances(self, graph_id: str) -> np.ndarray:
+        """The published (refreshing if stale) distance matrix of one graph."""
+        return self._fresh_snapshot(graph_id).dist
+
+    # ------------------------------------------------------------ scheduler
+    def submit(self, graph_id: str, src: int, dst: int) -> Ticket:
+        """Enqueue a query on the micro-batcher; resolve with
+        ``ticket.result()`` (or let ``poll()``/max-batch flush it)."""
+        return self.batcher.submit(graph_id, src, dst)
+
+    def poll(self) -> bool:
+        """Flush the batcher if its oldest query aged past max_wait_s."""
+        return self.batcher.poll()
+
+    def _flush_batch(self, batch: list[PendingQuery]) -> list[RouteReply]:
+        return self.query_many([(q.graph_id, q.src, q.dst) for q in batch])

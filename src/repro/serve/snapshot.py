@@ -1,0 +1,117 @@
+"""Double-buffered snapshot store: consistent reads under live refreshes.
+
+The serving invariant: a query must never observe a half-updated routing
+table.  ``SnapshotStore`` gets this with immutability plus a two-slot
+(front/back) buffer per graph:
+
+  * the **active** slot is what queries read — an immutable ``Snapshot``
+    (read-only numpy arrays, a frozen dataclass);
+  * a refresh writes its freshly solved tables into the **staged** slot
+    with ``stage()``; queries keep hitting the old active snapshot;
+  * ``publish()`` swaps staged → active in one reference assignment.
+
+A reader that grabbed ``active(gid)`` before a publish keeps a fully
+consistent (dist, succ, version) view for as long as it holds the object —
+the swap never mutates a published snapshot, it only changes which object
+subsequent readers get.  This is the host-side analogue of the double
+buffering the fused kernel does in VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable solved view of a graph: distances + next hops.
+
+    ``succ`` is None when the refresh ran distance-only (distributed
+    meshes); queries then reconstruct hops from dist + the adjacency
+    matrix.  ``version`` increases monotonically per graph with every
+    publish, so a reply can be traced to the exact table that served it.
+    """
+
+    dist: np.ndarray
+    succ: np.ndarray | None
+    version: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.dist.nbytes + (0 if self.succ is None else self.succ.nbytes)
+
+
+def _freeze(a: np.ndarray) -> np.ndarray:
+    """Read-only view-or-copy: callers handed a snapshot must not be able
+    to corrupt the cache in place."""
+    a = np.asarray(a)
+    if a.flags.writeable:
+        a = np.array(a, copy=True)
+        a.flags.writeable = False
+    return a
+
+
+class SnapshotStore:
+    """Per-graph front/back snapshot buffers (see module docstring)."""
+
+    def __init__(self):
+        self._active: dict[str, Snapshot] = {}
+        self._staged: dict[str, Snapshot] = {}
+        self.publishes = 0
+
+    # -------------------------------------------------------------- writers
+    def stage(self, graph_id: str, dist, succ=None) -> Snapshot:
+        """Write a solved table into the back buffer (not yet visible)."""
+        version = self.version(graph_id) + 1
+        snap = Snapshot(
+            dist=_freeze(dist),
+            succ=None if succ is None else _freeze(succ),
+            version=version,
+        )
+        self._staged[graph_id] = snap
+        return snap
+
+    def publish(self, graph_id: str) -> Snapshot:
+        """Atomically swap the staged snapshot to active."""
+        snap = self._staged.pop(graph_id, None)
+        if snap is None:
+            raise KeyError(f"nothing staged for graph {graph_id!r}")
+        self._active[graph_id] = snap
+        self.publishes += 1
+        return snap
+
+    def publish_all(self) -> int:
+        """Publish every staged snapshot; returns how many flipped."""
+        n = 0
+        for gid in list(self._staged):
+            self.publish(gid)
+            n += 1
+        return n
+
+    def drop(self, graph_id: str) -> None:
+        self._active.pop(graph_id, None)
+        self._staged.pop(graph_id, None)
+
+    # -------------------------------------------------------------- readers
+    def active(self, graph_id: str) -> Snapshot | None:
+        """The snapshot queries should read, or None before first publish."""
+        return self._active.get(graph_id)
+
+    def staged(self, graph_id: str) -> Snapshot | None:
+        return self._staged.get(graph_id)
+
+    def version(self, graph_id: str) -> int:
+        """Highest version either buffer holds (0 = never solved)."""
+        a = self._active.get(graph_id)
+        s = self._staged.get(graph_id)
+        return max(a.version if a else 0, s.version if s else 0)
+
+    def ids(self) -> list[str]:
+        return list(self._active)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.nbytes for s in self._active.values()) + sum(
+            s.nbytes for s in self._staged.values()
+        )

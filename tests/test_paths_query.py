@@ -1,0 +1,129 @@
+"""Query-path coverage: extract_path / extract_path_from_dist edge cases.
+
+Satellite 3 of ISSUE 7: the serving layer's host-side walks must behave on
+unreachable pairs, self-loops, graphs whose solve went through padding,
+and distance tables cached in their storage lowerings (saturating int16
+sentinels and bf16) — numpy treats int16 "infinity" (32767) as finite and
+wraps it under +, so the walk lifts lowered tables to IEEE floats first
+(``core.paths._lift_distances``).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apsp import ApspEngine, solve
+from repro.core.paths import (
+    extract_path,
+    extract_path_from_dist,
+    path_cost,
+)
+from repro.core.semiring import I16_INF
+
+
+def _line_graph(n):
+    """0 → 1 → … → n-1 with unit edges; nothing points back."""
+    w = np.full((n, n), np.inf, np.float32)
+    np.fill_diagonal(w, 0.0)
+    for i in range(n - 1):
+        w[i, i + 1] = 1.0
+    return w
+
+
+# ----------------------------------------------------------- successor walk
+def test_succ_walk_unreachable_and_self_loop():
+    w = _line_graph(4)
+    res = solve(w, method="naive", successors=True)
+    succ = np.asarray(res.succ)
+    assert extract_path(succ, 0, 3) == [0, 1, 2, 3]
+    assert extract_path(succ, 3, 0) == []          # unreachable
+    assert extract_path(succ, 2, 2) == [2]         # self-loop: src == dst
+
+
+def test_dist_walk_unreachable_and_self_loop():
+    w = _line_graph(4)
+    dist = np.asarray(solve(w, method="naive").dist)
+    assert extract_path_from_dist(w, dist, 0, 3) == [0, 1, 2, 3]
+    assert extract_path_from_dist(w, dist, 3, 0) == []
+    assert extract_path_from_dist(w, dist, 2, 2) == [2]
+    assert path_cost(w, []) == np.inf
+
+
+def test_walks_agree_through_padded_solve():
+    """n=7 at block_size=4 pads to 8: padded rows/cols are ⊕-identity and
+    must never appear in a reconstructed path."""
+    rng = np.random.default_rng(0)
+    n = 7
+    w = rng.integers(1, 10**6, (n, n)).astype(np.float32)  # tie-free
+    w[rng.uniform(size=(n, n)) > 0.5] = np.inf
+    np.fill_diagonal(w, 0.0)
+    res = solve(w, method="fused", block_size=4, successors=True,
+                validate=False)
+    dist, succ = np.asarray(res.dist), np.asarray(res.succ)
+    assert dist.shape == (n, n)  # padding stripped
+    for src in range(n):
+        for dst in range(n):
+            p1 = extract_path(succ, src, dst)
+            p2 = extract_path_from_dist(w, dist, src, dst)
+            assert p1 == p2  # tie-free → identical vertex sequences
+            if p1:
+                assert all(v < n for v in p1)
+                assert abs(path_cost(w, p1) - dist[src, dst]) < 1e-3
+            else:
+                assert not np.isfinite(dist[src, dst]) or src == dst
+
+
+# ------------------------------------------------------- lowered-dtype tables
+def test_dist_walk_int16_sentinels():
+    """int16 tables: 32767 must read as unreachable, and the walk must not
+    wrap (32767 + w overflows int16)."""
+    w = np.array(
+        [[0, 5, I16_INF],
+         [I16_INF, 0, 7],
+         [I16_INF, I16_INF, 0]], dtype=np.int16)
+    eng = ApspEngine(method="fused", dtype=jnp.int16, validate=False)
+    dist = np.asarray(eng.solve(w).dist)
+    assert dist.dtype == np.int16 and dist[2, 0] == I16_INF
+    assert extract_path_from_dist(w, dist, 0, 2) == [0, 1, 2]
+    assert extract_path_from_dist(w, dist, 2, 0) == []   # sentinel ≠ finite
+    assert extract_path_from_dist(w, dist, 1, 1) == [1]
+    assert path_cost(w, [0, 1, 2]) == 12.0
+
+
+def test_dist_walk_bf16_tables():
+    w = _line_graph(5)
+    res = solve(w, method="fused", block_size=4, dtype=jnp.bfloat16,
+                validate=False)
+    dist = np.asarray(res.dist)
+    assert dist.dtype == jnp.bfloat16
+    assert extract_path_from_dist(w, dist, 0, 4) == [0, 1, 2, 3, 4]
+    assert extract_path_from_dist(w, dist, 4, 0) == []
+
+
+def test_routing_engine_query_on_lowered_tables():
+    """End-to-end: a distance-only routing table cached in int16 serves
+    queries (the succ-less walk goes through the lifted tables)."""
+    from repro.serve.routing import RoutingEngine
+
+    w = np.array(
+        [[0, 3, I16_INF, I16_INF],
+         [I16_INF, 0, 4, I16_INF],
+         [I16_INF, I16_INF, 0, 5],
+         [I16_INF, I16_INF, I16_INF, 0]], dtype=np.int16)
+    eng = ApspEngine(method="fused", dtype=jnp.int16, validate=False)
+    router = RoutingEngine(engine=eng)
+    router.add_graph("g", w)
+    router.refresh()
+    snap = router.snapshots.active("g")
+    if snap.succ is not None:
+        pytest.skip("engine produced successor tables; dist-walk not used")
+    r = router.query("g", 0, 3)
+    assert r.path == [0, 1, 2, 3] and r.cost == 12.0
+    assert not router.query("g", 3, 0).reachable
+
+
+def test_succ_walk_negative_entries_defensive():
+    """A corrupt/-1 successor entry mid-walk returns [] instead of looping."""
+    succ = np.array([[0, 1], [-1, 1]], dtype=np.int32)
+    succ_bad = succ.copy()
+    succ_bad[0, 1] = -1
+    assert extract_path(succ_bad, 0, 1) == []

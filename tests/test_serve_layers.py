@@ -1,0 +1,267 @@
+"""The layered serving subsystem: registry, snapshots, scheduler, routing.
+
+Covers the ISSUE 7 serving contracts the monolithic RoutingEngine never
+had:
+
+  * dirty *classification* — ⊕-improving ``update_edge`` accumulates an
+    edge-delta backlog (repairable); replacements/removals are structural
+    (re-solve) and clear the backlog;
+  * per-graph memory accounting + LRU eviction of solved tables (weights
+    never evicted; evicted graphs re-solve on demand);
+  * double-buffered snapshots — a reader's table is immutable across a
+    racing refresh+publish;
+  * micro-batching max-batch/max-wait policy (fake clock);
+  * the satellite-2 regression: refreshing ONE dirty graph must not
+    re-solve the other dirty graphs, and clean graphs never re-solve
+    (plan-cache traces stay flat).
+"""
+import numpy as np
+import pytest
+
+from repro.core.graph import random_digraph
+from repro.serve.registry import DELTA, STRUCTURAL, GraphRegistry
+from repro.serve.routing import RoutingEngine
+from repro.serve.scheduler import MicroBatcher
+from repro.serve.snapshot import SnapshotStore
+
+
+# --------------------------------------------------------------- registry
+def test_registry_dirty_classification():
+    reg = GraphRegistry()
+    reg.put("g", np.zeros((4, 4), np.float32))
+    assert reg.dirty_kind("g") == STRUCTURAL  # new graph: full solve
+
+    reg.clear_dirty("g")
+    reg.mark_edge_delta("g", 0, 1, 2.5)
+    reg.mark_edge_delta("g", 2, 3, 1.0)
+    assert reg.dirty_kind("g") == DELTA
+    assert [e.as_tuple() for e in reg.pending_deltas("g")] == [
+        (0, 1, 2.5), (2, 3, 1.0)]
+
+    # structural wins and clears the delta backlog (deltas are relative to
+    # a solved table the structural change invalidates)
+    reg.mark_structural("g")
+    assert reg.dirty_kind("g") == STRUCTURAL
+    assert reg.pending_deltas("g") == []
+    # delta onto a structurally-dirty graph stays structural
+    reg.mark_edge_delta("g", 0, 1, 1.0)
+    assert reg.dirty_kind("g") == STRUCTURAL and reg.pending_deltas("g") == []
+
+
+def test_registry_memory_accounting_and_lru_eviction():
+    reg = GraphRegistry(capacity_bytes=3 * 64 + 2 * 100)
+    for gid in ("a", "b", "c"):
+        reg.put(gid, np.zeros((4, 4), np.float32))  # 64 B each
+        reg.clear_dirty(gid)
+        reg.note_table_bytes(gid, 100)
+    assert reg.graph_bytes("a") == 164 and reg.total_bytes == 3 * 164
+    reg.touch("a")  # LRU order now b, c, a
+    evicted = reg.evict_over_capacity()
+    assert evicted == ["b"]  # one table (100 B) brings 492 under 392
+    assert reg.dirty_kind("b") == STRUCTURAL  # re-solves on next read
+    assert reg.graph_bytes("b") == 64  # weights never evicted
+    # keep= shields this cycle's refreshed graphs
+    reg.note_table_bytes("b", 100)
+    reg.capacity_bytes = 0
+    assert "c" in reg.evict_over_capacity(keep={"a", "b"})
+    assert reg.evictions == 2
+
+
+def test_registry_frozen_weights():
+    reg = GraphRegistry()
+    w = np.zeros((4, 4), np.float32)
+    reg.put("g", w)
+    w[0, 1] = 5.0  # caller mutation cannot reach the registry copy
+    assert reg.peek("g")[0, 1] == 0.0
+    with pytest.raises(ValueError):
+        reg.peek("g")[0, 0] = 1.0  # read-only
+    with pytest.raises(KeyError):
+        reg.get("missing")
+
+
+# --------------------------------------------------------------- snapshots
+def test_snapshot_double_buffering_consistency():
+    store = SnapshotStore()
+    store.stage("g", np.eye(3, dtype=np.float32))
+    assert store.active("g") is None  # staged ≠ visible
+    first = store.publish("g")
+    assert first.version == 1
+
+    held = store.active("g")
+    held_dist = held.dist.copy()
+    store.stage("g", 2 * np.eye(3, dtype=np.float32))
+    # mid-refresh: reader still sees the old table, bit for bit
+    assert store.active("g") is held
+    assert np.array_equal(held.dist, held_dist)
+    second = store.publish("g")
+    assert second.version == 2 and store.active("g") is second
+    # the previously-held snapshot object is still intact after the swap
+    assert np.array_equal(held.dist, held_dist) and held.version == 1
+    with pytest.raises(ValueError):
+        store.active("g").dist[0, 0] = 9.0  # published tables are frozen
+    with pytest.raises(KeyError):
+        store.publish("g")  # nothing staged
+
+
+# --------------------------------------------------------------- scheduler
+def test_microbatcher_max_batch_flush():
+    seen = []
+
+    def flush(batch):
+        seen.append(len(batch))
+        return [q.src + q.dst for q in batch]
+
+    mb = MicroBatcher(flush, max_batch=3, max_wait_s=999.0)
+    t1 = mb.submit("g", 1, 2)
+    t2 = mb.submit("g", 3, 4)
+    assert not t1.done and mb.pending == 2
+    t3 = mb.submit("g", 5, 6)  # hits max_batch → immediate flush
+    assert seen == [3] and t1.done and t2.done and t3.done
+    assert (t1.result(), t2.result(), t3.result()) == (3, 7, 11)
+
+
+def test_microbatcher_max_wait_fake_clock():
+    now = [0.0]
+    flushes = []
+
+    def flush(batch):
+        flushes.append(len(batch))
+        return [0] * len(batch)
+
+    mb = MicroBatcher(flush, max_batch=100, max_wait_s=0.5, clock=lambda: now[0])
+    mb.submit("g", 0, 1)
+    assert not mb.poll()  # too young
+    now[0] = 0.4
+    mb.submit("g", 0, 2)
+    assert not mb.poll()  # age is measured from the OLDEST ticket
+    now[0] = 0.51
+    assert mb.poll() and flushes == [2] and mb.pending == 0
+    assert not mb.poll()  # empty queue is a no-op
+
+
+def test_microbatcher_result_forces_flush():
+    mb = MicroBatcher(lambda b: [q.dst for q in b], max_batch=10,
+                      max_wait_s=999.0)
+    t = mb.submit("g", 0, 7)
+    assert t.result() == 7  # no blocking behind an idle queue
+    assert mb.flushes == 1
+
+
+# ----------------------------------------------------------------- routing
+def test_refresh_restricted_to_requested_dirty_set():
+    """Satellite-2 regression: with several dirty graphs, refreshing (or
+    querying) one must solve that one only — the rest stay dirty and the
+    engine does not touch them."""
+    router = RoutingEngine(method="naive")
+    for i in range(3):
+        router.add_graph(f"g{i}", random_digraph(24, density=0.5, seed=i))
+    assert router.dirty_count == 3
+    assert router.refresh(["g1"]) == 1
+    assert router.dirty_count == 2
+    assert router.engine.stats.graphs_solved == 1
+    assert router.snapshots.active("g0") is None  # untouched, still dirty
+
+    # the query path uses the same restriction
+    router.query("g0", 0, 5)
+    assert router.dirty_count == 1
+    assert router.engine.stats.graphs_solved == 2
+    assert router.registry.dirty_kind("g2") is not None
+
+
+def test_clean_graphs_never_resolve_traces_flat():
+    """Querying a clean graph after other graphs go dirty must not re-solve
+    it: solve counters and plan-cache traces stay flat."""
+    router = RoutingEngine(method="naive")
+    router.add_graph("hot", random_digraph(24, density=0.5, seed=0))
+    router.add_graph("cold", random_digraph(24, density=0.5, seed=1))
+    router.refresh()
+    solves = router.engine.stats.solves
+    traces = {k: e.traces for k, e in router.engine._cache.items()}
+
+    router.fail_link("hot", 0, 1)  # only "hot" goes dirty
+    for _ in range(3):
+        router.query("cold", 2, 9)
+    assert router.engine.stats.solves == solves  # cold never re-solved
+    assert router.registry.dirty_kind("hot") == STRUCTURAL  # still pending
+    router.query("hot", 0, 1)
+    assert router.engine.stats.solves == solves + 1
+    # no pre-existing executable retraced (the hot re-solve may add a new
+    # B=1 plan entry; it must not disturb the batched one)
+    assert all(router.engine._cache[k].traces == t for k, t in traces.items())
+
+
+def test_update_edge_routes_through_repair():
+    """An ⊕-improving update refreshes via ONE rank-1 repair (no solve),
+    and the repaired table equals a from-scratch re-solve bitwise."""
+    rng = np.random.default_rng(0)
+    n = 48
+    w = rng.integers(1, 10**6, (n, n)).astype(np.float32)
+    w[rng.uniform(size=(n, n)) > 0.4] = np.inf
+    np.fill_diagonal(w, 0.0)
+
+    router = RoutingEngine(method="fused")
+    router.add_graph("g", w)
+    router.refresh()
+    solves = router.engine.stats.solves
+
+    assert router.update_edge("g", 3, 7, 5.0)
+    assert router.registry.dirty_kind("g") == DELTA
+    reply = router.query("g", 3, 7)
+    assert router.engine.stats.solves == solves  # repaired, not re-solved
+    assert router.repair_refreshes == 1 and router.engine.stats.repairs == 1
+    assert reply.cost == 5.0 and reply.path == [3, 7]
+
+    w1 = np.array(w)
+    w1[3, 7] = 5.0
+    full = router.engine.solve(w1, successors=True)
+    snap = router.snapshots.active("g")
+    assert np.array_equal(snap.dist, np.asarray(full.dist))
+    assert np.array_equal(snap.succ, np.asarray(full.succ))
+
+    # a worsening cannot go through update_edge (⊕-merge is a no-op) …
+    assert not router.update_edge("g", 3, 7, 100.0)
+    assert router.registry.dirty_kind("g") is None
+    # … it goes through set_edge, which is structural
+    router.set_edge("g", 3, 7, 100.0)
+    assert router.registry.dirty_kind("g") == STRUCTURAL
+    router.query("g", 3, 7)
+    assert router.engine.stats.solves == solves + 2  # check-solve + refresh
+
+
+def test_routing_eviction_end_to_end():
+    """Over-capacity tables evict (next cycle), evicted graphs re-solve on
+    demand, and weights survive eviction."""
+    rng = np.random.default_rng(0)
+    router = RoutingEngine(method="naive", capacity_bytes=20_000)
+
+    def g():
+        m = np.abs(rng.standard_normal((24, 24))).astype(np.float32)
+        np.fill_diagonal(m, 0)
+        return m
+
+    for i in range(4):
+        router.add_graph(f"g{i}", g())
+    router.refresh()   # all shielded this cycle
+    router.add_graph("g4", g())
+    router.refresh()   # now LRU tables evict
+    assert router.registry.evictions > 0
+    assert router.snapshots.active("g0") is None
+    assert router.query("g0", 0, 5).cost >= 0  # re-solves on demand
+
+
+def test_routing_scheduler_integration():
+    router = RoutingEngine(method="naive", max_batch=4)
+    router.add_graph("g", random_digraph(16, density=0.6, seed=0))
+    tickets = [router.submit("g", 0, d) for d in range(1, 5)]  # 4 → flush
+    assert all(t.done for t in tickets)
+    assert router.batcher.flushes == 1 and router.batcher.max_seen_batch == 4
+    assert all(t.result().graph_id == "g" for t in tickets)
+
+
+def test_serve_engine_shim_reexports():
+    """Satellite 1: the old import path keeps working."""
+    from repro.serve.engine import Engine, RouteReply, RoutingEngine  # noqa: F401
+    from repro.serve.engine import cache_pspecs, make_serve_fns  # noqa: F401
+    from repro.serve.lm import Engine as LMEngine
+
+    assert Engine is LMEngine
