@@ -30,6 +30,15 @@ trajectory is machine-trackable across PRs.
   serve_qps        — mixed query/update load through the layered serving
                      stack (serve/routing.py): per-query p50/p99 + QPS,
                      repair-vs-resolve refresh split in the derived column
+  fw_oocore        — out-of-core recursive (R-Kleene) ladder: in-core
+                     recursive vs fused at n∈{512,1024}, a capped-budget
+                     streamed solve whose matrix exceeds the configured
+                     HBM budget, and transfer_efficiency_pct = modeled /
+                     measured host↔device stream bytes (×100)
+
+Every run stamps a ``_meta`` entry (JAX backend + device kind) into
+BENCH_fw.json so wall-clock and bandwidth numbers are always read against
+the platform that produced them.
 
 Run: PYTHONPATH=src python -m benchmarks.run [table ...]
      PYTHONPATH=src python -m benchmarks.run --smoke
@@ -282,10 +291,13 @@ def bench_fw_fused():
                             block_size=s, reps=reps)
         rows.append(("fw_fused/solve", f"n={n}", t * 1e6,
                      f"{n**3/t/1e9:.2f}Gtasks/s,1disp/round"))
+        # Bandwidth rows carry the backend that produced them: on the CPU
+        # container these are XLA-ref wall-clocks, NOT a TPU HBM roofline —
+        # the _meta stamp in BENCH_fw.json says the same on the JSON side.
         rows.append(("fw_fused/hbm_gbps", f"n={n}",
                      plan.achieved_hbm_gbps(n, s, t),
                      f"model={plan.fused_solve_hbm_bytes(n, s)/1e6:.0f}"
-                     f"MB/solve,f32"))
+                     f"MB/solve,f32,backend={jax.default_backend()}"))
         if n in DTYPE_SIZES:
             for dname in DTYPES:
                 dt = {"int16": jnp.int16, "bfloat16": jnp.bfloat16}[dname]
@@ -450,6 +462,73 @@ def bench_serve_qps():
     ]
 
 
+OOCORE_SIZES = (512, 1024)
+OOCORE_BUDGET_N = 1024
+# 2.5 MiB device budget vs the 4 MiB n=1024 f32 matrix: recursive_plan
+# floors the leaf at one 128-block panel (resident ≈ 2.3 MiB) and the
+# solve must genuinely stream panels through the host backing store.
+OOCORE_BUDGET = 5 << 19
+
+
+def bench_fw_oocore():
+    """Out-of-core recursive (R-Kleene) ladder (ISSUE 8).
+
+    Rows:
+
+      solve_fused      — the in-core fused one-dispatch-per-round baseline
+      solve_recursive  — the same solve through the R-Kleene driver
+                         (leaf panels via the fused-round dataflow, outside
+                         tiles via factor-snapshot min-plus contractions);
+                         bitwise-equal by construction, the derived column
+                         carries the overhead ratio the sweep dispatches add
+      streamed         — a capped-budget solve (OOCORE_BUDGET < matrix) on
+                         the host-resident backing store: panels h2d/d2h
+                         through the double-buffered streamer
+      transfer_efficiency_pct — modeled stream bytes / measured ×100 (the
+                         schedule makes them exact; 15% is the CI band)
+
+    Wall numbers are CPU-container refs like every other table; the byte
+    counters and the recursive/fused ratio are the portable signals.
+    """
+    from repro.apsp import solve
+    from repro.core.graph import random_digraph
+    from repro.launch.fw_oocore import stream_once
+
+    rows = []
+    for n in OOCORE_SIZES:
+        w = random_digraph(n, density=1.0, seed=n)
+        s = min(128, n)
+        rp = plan.recursive_plan(n, block_size=s)
+        reps = 2
+        t_f = fw_table1._time(
+            lambda w=w, s=s: solve(w, method="fused", block_size=s,
+                                   validate=False).dist, reps=reps)
+        t_r = fw_table1._time(
+            lambda w=w, s=s: solve(w, method="recursive", block_size=s,
+                                   validate=False).dist, reps=reps)
+        rows.append(("fw_oocore/solve_fused", f"n={n}", t_f * 1e6,
+                     f"{n**3/t_f/1e9:.2f}Gtasks/s,in_core_baseline"))
+        rows.append(("fw_oocore/solve_recursive", f"n={n}", t_r * 1e6,
+                     f"leaf={rp['leaf']},{rp['sweep_calls']}sweeps,"
+                     f"ratio={t_r/t_f:.2f}x_fused"))
+    # bitwise vs fused is guarded by --smoke and tests/test_kleene.py;
+    # check=False keeps the big-n bench from paying a third full solve.
+    m = stream_once(OOCORE_BUDGET_N, budget=OOCORE_BUDGET, block_size=128,
+                    check=False)
+    rows.append((
+        "fw_oocore/streamed", f"n={OOCORE_BUDGET_N},budget=2.5MB",
+        m["streamed_s"] * 1e6,
+        f"leaf={m['leaf']},resident={m['hbm_resident_bytes']/1e6:.1f}MB,"
+        f"matrix={m['matrix_bytes']/1e6:.1f}MB"))
+    model = m["model_h2d_bytes"] + m["model_d2h_bytes"]
+    measured = m["measured_h2d_bytes"] + m["measured_d2h_bytes"]
+    rows.append((
+        "fw_oocore/transfer_efficiency_pct", f"n={OOCORE_BUDGET_N}",
+        m["transfer_efficiency_pct"] or 0.0,
+        f"model={model/1e6:.1f}MB,measured={measured/1e6:.1f}MB"))
+    return rows
+
+
 TABLES = {
     "fw_table1": bench_fw_table1,
     "fw_scaling": bench_fw_scaling,
@@ -460,6 +539,7 @@ TABLES = {
     "fw_packed": bench_fw_packed,
     "fw_repair": bench_fw_repair,
     "serve_qps": bench_serve_qps,
+    "fw_oocore": bench_fw_oocore,
 }
 
 
@@ -513,6 +593,12 @@ def expected_keys() -> dict[str, list[str]]:
             f"serve_qps/{k}[G={SERVE_G},n={SERVE_N}]"
             for k in ("qps", "p50_us", "p99_us")
         ],
+        "fw_oocore": (
+            [f"fw_oocore/solve_fused[n={n}]" for n in OOCORE_SIZES]
+            + [f"fw_oocore/solve_recursive[n={n}]" for n in OOCORE_SIZES]
+            + [f"fw_oocore/streamed[n={OOCORE_BUDGET_N},budget=2.5MB]",
+               f"fw_oocore/transfer_efficiency_pct[n={OOCORE_BUDGET_N}]"]
+        ),
     }
 
 
@@ -580,10 +666,39 @@ def smoke() -> None:
         sys.exit("smoke: rank-1 repair diverges from the full re-solve")
     print("smoke: rank-1 repair == full re-solve (dist AND succ, bitwise)")
 
+    # The fw_oocore guard (ISSUE 8): the recursive (R-Kleene) schedule must
+    # reproduce the fused solve bitwise, and a capped hbm_budget must
+    # actually stream panels host↔device with traffic on the plan's
+    # transfer-byte model (the deeper per-lowering matrix lives in
+    # fw_oocore --smoke and tests/test_kleene.py).
+    rec = solve(w, method="recursive", block_size=32, leaf=32, validate=False)
+    if not np.array_equal(np.asarray(rec.dist), np.asarray(res.dist)):
+        sys.exit("smoke: recursive solve diverges from the fused solve")
+    from repro.launch.fw_oocore import stream_once
+
+    sm = stream_once(256, budget=(256 * 256 * 4) * 6 // 10, block_size=32)
+    model = sm["model_h2d_bytes"] + sm["model_d2h_bytes"]
+    measured = sm["measured_h2d_bytes"] + sm["measured_d2h_bytes"]
+    if not sm["out_of_core"] or measured <= 0:
+        sys.exit("smoke: capped-budget solve did not stream panels")
+    if abs(measured - model) > 0.15 * model:
+        sys.exit(f"smoke: streamed {measured}B vs model {model}B outside 15%")
+    print(f"smoke: recursive == fused (bitwise); capped budget streams "
+          f"{measured}B vs model {model}B")
+
     if not os.path.exists(BENCH_JSON):
         sys.exit(f"smoke: {BENCH_JSON} missing — run the benchmarks first")
     with open(BENCH_JSON) as f:
-        have = set(json.load(f))
+        data = json.load(f)
+    # The platform stamp: every committed number must say what backend
+    # produced it (CPU-container refs are not a TPU roofline).
+    meta = data.get("_meta")
+    if not (isinstance(meta, dict) and meta.get("backend")):
+        sys.exit("smoke: BENCH_fw.json lacks a _meta backend stamp — "
+                 "rerun the benchmarks")
+    print(f"smoke: BENCH_fw.json stamped backend={meta['backend']} "
+          f"device={meta.get('device')}")
+    have = {k for k in data if not k.startswith("_")}
     want_keys = {k for keys in expected_keys().values() for k in keys}
     missing = sorted(want_keys - have)
     # Every key in the file is table-produced, so anything outside the
@@ -623,6 +738,17 @@ def main() -> None:
             print(f"{name},{params},{us:.1f},{derived}")
             record[f"{name}[{params}]"] = round(us, 1)
             fresh += 1
+    # Platform stamp: "_meta" has no "/" so partial reruns never drop it via
+    # the table filter above; every run refreshes it to the live backend.
+    dev = jax.devices()[0]
+    record["_meta"] = {
+        "backend": jax.default_backend(),
+        "device": dev.device_kind,
+        "device_count": jax.device_count(),
+        "note": "wall-clock and hbm_gbps measured on this backend; "
+                "cpu-container numbers are interpret-mode XLA refs, "
+                "not a TPU roofline",
+    }
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=1, sort_keys=True)
     print(f"# wrote {fresh}/{len(record)} entries to {BENCH_JSON}", file=sys.stderr)

@@ -8,8 +8,11 @@ pick a method and block size, run, unpad, verify.  ``solve`` owns all of it:
     the top-left n×n of the padded closure equals the closure of the input.
   * **dispatch** — ``method="auto"`` picks a sensible rung of the paper's
     implementation ladder for the input size and backend; explicit names
-    ("numpy" | "naive" | "blocked" | "staged" | "fused" | "distributed")
-    pin one ("fused" = staged with the single-dispatch fused round kernel).
+    ("numpy" | "naive" | "blocked" | "staged" | "fused" | "recursive" |
+    "distributed") pin one ("fused" = staged with the single-dispatch fused
+    round kernel; "recursive" = the R-Kleene panel schedule of
+    ``apsp.kleene``, auto-selected whenever an ``hbm_budget`` is given and
+    the padded matrix would not fit it).
   * **batching** — a (B, n, n) input runs all B graphs through the kernels'
     *native* batch grid (staged/fused: one dispatch per round for the whole
     batch; blocked/naive: one vmap-ed computation); results match per-graph
@@ -34,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apsp import plan
+from repro.apsp.kleene import fw_kleene
 from repro.core.floyd_warshall import fw_blocked, fw_naive, fw_numpy
 from repro.core.paths import fw_blocked_with_successors, fw_with_successors
 from repro.core.semiring import (
@@ -49,7 +53,10 @@ from repro.core.semiring import (
 from repro.core.staged import fw_staged, fw_staged_with_successors
 from repro.kernels.ops import default_interpret as _default_interpret
 
-METHODS = ("auto", "numpy", "naive", "blocked", "staged", "fused", "distributed")
+METHODS = (
+    "auto", "numpy", "naive", "blocked", "staged", "fused", "recursive",
+    "distributed",
+)
 
 # Methods that can track next-hop successor matrices (min-plus only).
 SUCCESSOR_METHODS = ("naive", "blocked", "staged", "fused")
@@ -168,6 +175,7 @@ def _resolve_method(method: str, n: int, successors: bool) -> str:
 def _resolve_shape(
     method: str, n: int, successors: bool, block_size: int | None,
     *, mesh=None, row_axes="data", col_axes="model",
+    hbm_budget: int | None = None, batch: int = 1, word: int = 4,
 ) -> tuple[str, int | None, int]:
     """(method, block_size, n_padded) — THE dispatch-and-padding policy.
 
@@ -176,7 +184,11 @@ def _resolve_shape(
     method="distributed" the padding multiple depends on the mesh grid, not
     just the tile size: with a mesh it routes through
     ``plan.distributed_plan`` (auto-padding to the mesh multiple); without
-    one it returns n unchanged and the caller raises.
+    one it returns n unchanged and the caller raises.  ``hbm_budget``
+    (device bytes) promotes any in-core tiled method to "recursive" when
+    the padded matrix (batch · m² · word bytes) would not fit — recursive
+    pads identically to fused at the same block size, so the promotion
+    never changes the padded shape, only the schedule.
     """
     meth = _resolve_method(method, n, successors)
     if meth == "distributed" and mesh is not None:
@@ -188,9 +200,17 @@ def _resolve_shape(
             n, R * C, grid=(R, C), block_size=block_size
         )
         return meth, dp["block_size"], dp["n_padded"]
-    if meth in ("blocked", "staged", "fused"):
+    if meth in ("blocked", "staged", "fused", "recursive"):
         s = block_size or plan.auto_block_size(n)
-        return meth, s, plan.padded_size(n, s)
+        m = plan.padded_size(n, s)
+        if (
+            meth != "recursive"
+            and not successors
+            and hbm_budget is not None
+            and batch * m * m * word > hbm_budget
+        ):
+            meth = "recursive"
+        return meth, s, m
     return meth, None, n
 
 
@@ -281,6 +301,9 @@ def solve(
     col_axes="model",
     variant: str = "fori",
     interpret: bool | None = None,
+    leaf: int | None = None,
+    hbm_budget: int | None = None,
+    devices=None,
 ) -> APSPResult:
     """All-pairs shortest paths (semiring closure) of one or many graphs.
 
@@ -329,6 +352,16 @@ def solve(
        only; forces a host sync).
     mesh/row_axes/col_axes: device mesh for method="distributed".
     variant/interpret: staged-kernel lowering knobs (passed through).
+    leaf: pivot-panel width for method="recursive" (multiple of block_size;
+       None = ``plan.recursive_plan``'s pick — budget-fattest power of two
+       when out of core, 4·block_size in core).
+    hbm_budget: device-memory budget in bytes.  When the padded matrix
+       (batch · m² · word) exceeds it, any in-core tiled method — including
+       "auto" — is promoted to "recursive" and the solve streams panels
+       from a host-side backing store (``apsp.kleene.HostPanelStore``),
+       keeping only the pivot cross + factors resident.  Bitwise equal to
+       the in-core fused solve on every semiring lowering.
+    devices: optional device list round-robining recursive sweep tiles.
 
     Returns an ``APSPResult``: ``dist`` (same leading shape/dtype as the
     input, unpadded), ``succ`` (int32 or None), plus the resolved method /
@@ -368,6 +401,8 @@ def solve(
     meth, s, m = _resolve_shape(
         method, n, successors, block_size,
         mesh=mesh, row_axes=row_axes, col_axes=col_axes,
+        hbm_budget=hbm_budget, batch=arr.shape[0] if batched else 1,
+        word=np.dtype(arr.dtype).itemsize,
     )
 
     if successors:
@@ -425,6 +460,22 @@ def solve(
                     fused="ref" if use_ref
                     else (True if meth == "fused" else None),
                 )
+        elif meth == "recursive":
+            # R-Kleene panel schedule: plan picks the leaf and decides
+            # in-core (device store) vs out-of-core (host store + streamed
+            # panels); either way the schedule replays the fused round's
+            # op chains exactly, so the closure is bitwise-equal to
+            # method="fused" at the same block size.
+            rp = plan.recursive_plan(
+                n, leaf=leaf, hbm_budget=hbm_budget, block_size=s,
+                batch=arr.shape[0] if batched else 1, dtype=wp.dtype,
+                variant=variant,
+            )
+            dist = fw_kleene(
+                wp, semiring=sr, block_size=s, leaf=rp["leaf"],
+                variant=variant, out_of_core=rp["out_of_core"],
+                interpret=interpret, devices=devices,
+            )
         else:  # distributed — the fused bordered round, one dispatch/device
             from repro.core.distributed import fw_distributed
 

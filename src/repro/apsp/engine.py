@@ -83,6 +83,8 @@ class PlanKey:
     successors: bool
     mesh: tuple | None = None
     edges: int = 0  # repair entries: the padded edge-batch bucket E
+    leaf: int | None = None  # recursive entries: pivot-panel width
+    oocore: bool = False     # recursive entries: host-resident panel store
 
 
 @dataclasses.dataclass
@@ -111,6 +113,7 @@ class EngineStats:
     graphs_solved: int = 0
     repairs: int = 0         # rank-1 repair dispatches (ApspEngine.repair)
     edges_repaired: int = 0  # real (unpadded) edge updates absorbed by them
+    repair_rejects: int = 0  # should_repair fast-rejects (edge worsenings)
 
 
 class ApspEngine:
@@ -142,6 +145,9 @@ class ApspEngine:
         mesh=None,
         row_axes="data",
         col_axes="model",
+        leaf: int | None = None,
+        hbm_budget: int | None = None,
+        devices=None,
     ):
         """method/semiring/block dims pin the solve configuration; per-call
         shape/dtype/batch variation is absorbed by the plan cache.
@@ -162,6 +168,14 @@ class ApspEngine:
         shard-mapped batched solve over that mesh (plan keys carry the mesh
         signature), and ``solve_many`` buckets shard across devices without
         retracing.  Distributed solves do not track successors.
+
+        leaf/hbm_budget/devices configure method="recursive" (the R-Kleene
+        panel schedule of ``apsp.kleene``): ``hbm_budget`` also promotes
+        the in-core tiled methods to recursive whenever the padded matrix
+        would not fit the budget, exactly like ``api.solve``; plan keys
+        then carry (leaf, oocore), and the cached entry keeps ONE
+        ``KleeneExecutor`` whose jit caches make warm solves retrace
+        nothing.
         """
         if method not in METHODS:
             raise ValueError(f"unknown method {method!r}; have {METHODS}")
@@ -185,6 +199,9 @@ class ApspEngine:
         self.mesh = mesh
         self.row_axes = row_axes
         self.col_axes = col_axes
+        self.leaf = leaf
+        self.hbm_budget = hbm_budget
+        self.devices = devices
         self.stats = EngineStats()
         self._cache: dict[PlanKey, ExecutablePlan] = {}
 
@@ -207,10 +224,16 @@ class ApspEngine:
     def _resolve_shape(self, n: int, successors: bool) -> tuple[str, int | None, int]:
         """(method, block_size, n_padded) for an n-vertex graph — delegates
         to api._resolve_shape, the ONE dispatch-and-padding policy, so the
-        bucket key, the plan key, and stateless ``solve`` can never drift."""
+        bucket key, the plan key, and stateless ``solve`` can never drift.
+        The hbm_budget promotion is evaluated at batch=1 so bucketing stays
+        a pure function of n (a bucket's batch is unknown until formed)."""
+        word = (
+            jnp.dtype(self.dtype).itemsize if self.dtype is not None else 4
+        )
         return _resolve_shape(
             self.method, n, successors, self.block_size,
             mesh=self.mesh, row_axes=self.row_axes, col_axes=self.col_axes,
+            hbm_budget=self.hbm_budget, word=word,
         )
 
     def plan_for(
@@ -230,9 +253,19 @@ class ApspEngine:
         bb = None
         bk = self.bk
         dist_plan = None
+        rec_plan = None
         if s is not None:
             bk = min(bk, s)
-            if meth in ("staged", "fused"):
+            if meth == "recursive":
+                # Planned ONCE here; _build consumes the same dict, so the
+                # key's (leaf, oocore) and the executor's schedule cannot
+                # diverge.
+                rec_plan = plan.recursive_plan(
+                    n, leaf=self.leaf, hbm_budget=self.hbm_budget,
+                    block_size=s, batch=batch, dtype=dtype, bk=bk,
+                    variant=self.variant,
+                )
+            elif meth in ("staged", "fused"):
                 bb = self.batch_block or plan.auto_batch_block(
                     batch, m, s, bk=bk, variant=self.variant,
                     word=jnp.dtype(dtype).itemsize,
@@ -258,17 +291,22 @@ class ApspEngine:
             semiring=self.semiring.name, method=meth, block_size=s, bk=bk,
             batch_block=bb, successors=successors,
             mesh=self._mesh_sig if meth == "distributed" else None,
+            leaf=rec_plan["leaf"] if rec_plan else None,
+            oocore=rec_plan["out_of_core"] if rec_plan else False,
         )
         entry = self._cache.get(key)
         if entry is not None:
             self.stats.hits += 1
             return entry
         self.stats.misses += 1
-        entry = self._build(key, dist_plan=dist_plan)
+        entry = self._build(key, dist_plan=dist_plan, rec_plan=rec_plan)
         self._cache[key] = entry
         return entry
 
-    def _build(self, key: PlanKey, dist_plan: dict | None = None) -> ExecutablePlan:
+    def _build(
+        self, key: PlanKey, dist_plan: dict | None = None,
+        rec_plan: dict | None = None,
+    ) -> ExecutablePlan:
         """Construct the jitted batched runner for a cache key."""
         sr = self.semiring
         s, bk, bb = key.block_size, key.bk, key.batch_block
@@ -308,6 +346,50 @@ class ApspEngine:
 
             jitted = jax.jit(traced)
             entry.runner = lambda wp: jitted(jax.device_put(wp, sharding))
+            return entry
+
+        if key.method == "recursive":
+            # One KleeneExecutor per cache entry: its leaf/sweep jit caches
+            # ARE the warm-cache guarantee (a second solve on the same key
+            # re-enters the same compiled leaves and sweeps — ``traces``
+            # stays put).  Each call gets a fresh panel store; the executor
+            # holds no per-solve state.
+            from repro.apsp.kleene import (
+                DevicePanelStore,
+                HostPanelStore,
+                KleeneExecutor,
+            )
+
+            word = jnp.dtype(key.dtype).itemsize
+            entry = ExecutablePlan(
+                key=key,
+                runner=None,
+                vmem_bytes=plan.fused_round_vmem_bytes(
+                    key.leaf, s, bk, word=word, variant=self.variant,
+                ),
+                hbm_bytes_per_round=(
+                    rec_plan["hbm_bytes_total"] / rec_plan["rounds"]
+                    if rec_plan else None
+                ),
+            )
+            ex = KleeneExecutor(
+                semiring=sr, block_size=s, leaf=key.leaf, bk=bk,
+                variant=self.variant, interpret=interpret,
+                devices=self.devices,
+                on_trace=lambda: setattr(entry, "traces", entry.traces + 1),
+            )
+            oocore = key.oocore
+
+            def runner(wp):
+                store = (
+                    HostPanelStore(np.asarray(wp)) if oocore
+                    else DevicePanelStore(wp)
+                )
+                ex.run(store)
+                return jnp.asarray(store.result())
+
+            entry.runner = runner
+            entry.executor = ex  # introspection: depth/steps/byte counters
             return entry
 
         if key.method == "naive":
@@ -548,16 +630,28 @@ class ApspEngine:
     def should_repair(
         self, n: int, pending_updates: int, *,
         successors: bool = False, dtype=None, threshold: float = 0.5,
+        worsenings: int = 0,
     ) -> bool:
         """The staleness/accumulated-delta policy: is a rank-1 repair still
         cheaper than a full fused re-solve for this backlog?
 
-        Compares ``plan.repair_hbm_bytes`` for the accumulated edge count
-        against ``threshold ×`` the full solve's modeled traffic — past
-        the crossover (≈ threshold · n/s edges) the serving layer should
-        fall back to ``solve``, which also resets exactness drift from
-        any structural churn.
+        ``worsenings > 0`` fast-rejects regardless of cost: the rank-1
+        repair only absorbs ⊕-*improvements* (its relaxation ⊕-merges the
+        new edge into the closure), so a worsened edge — a min-plus weight
+        increase, a removal, a failed link — invalidates committed paths no
+        ⊕-merge can undo, and the only correct move is a full re-solve.
+        Rejects are counted in ``stats.repair_rejects`` so serving metrics
+        can tell "repair too expensive" from "repair would be wrong".
+
+        Otherwise compares ``plan.repair_hbm_bytes`` for the accumulated
+        edge count against ``threshold ×`` the full solve's modeled
+        traffic — past the crossover (≈ threshold · n/s edges) the serving
+        layer should fall back to ``solve``, which also resets exactness
+        drift from any structural churn.
         """
+        if worsenings > 0:
+            self.stats.repair_rejects += 1
+            return False
         if pending_updates < 1:
             return False
         s = self.block_size or plan.auto_block_size(n)

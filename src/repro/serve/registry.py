@@ -60,6 +60,7 @@ class GraphRegistry:
         self._lru: dict[str, None] = {}
         self._dirty: dict[str, str] = {}  # gid -> DELTA | STRUCTURAL
         self._deltas: dict[str, list[EdgeUpdate]] = {}
+        self._structural: dict[str, int] = {}  # gid -> worsening events
         self.evictions = 0
 
     # ------------------------------------------------------------- weights
@@ -112,6 +113,7 @@ class GraphRegistry:
         self._lru.pop(graph_id, None)
         self._dirty.pop(graph_id, None)
         self._deltas.pop(graph_id, None)
+        self._structural.pop(graph_id, None)
 
     def ids(self) -> list[str]:
         return list(self._graphs)
@@ -121,6 +123,7 @@ class GraphRegistry:
         """Replacement / removal / ⊕-worsening: full re-solve required."""
         self._dirty[graph_id] = STRUCTURAL
         self._deltas.pop(graph_id, None)
+        self._structural[graph_id] = self._structural.get(graph_id, 0) + 1
 
     def mark_edge_delta(self, graph_id: str, u: int, v: int, w) -> None:
         """Accumulate one ⊕-improving update; stays delta-dirty unless the
@@ -137,9 +140,15 @@ class GraphRegistry:
     def pending_deltas(self, graph_id: str) -> list[EdgeUpdate]:
         return list(self._deltas.get(graph_id, ()))
 
+    def structural_count(self, graph_id: str) -> int:
+        """Worsening/structural events since the last solve — the count
+        ``ApspEngine.should_repair(worsenings=…)`` fast-rejects on."""
+        return self._structural.get(graph_id, 0)
+
     def clear_dirty(self, graph_id: str) -> None:
         self._dirty.pop(graph_id, None)
         self._deltas.pop(graph_id, None)
+        self._structural.pop(graph_id, None)
 
     def dirty_ids(self) -> list[str]:
         """Insertion-ordered dirty set; drives refresh batching."""

@@ -224,11 +224,17 @@ class RoutingEngine:
                 self.registry.dirty_kind(gid) == _registry.DELTA
                 and snap is not None
                 and deltas
+                # worsenings= is the explicit belt to dirty_kind's braces:
+                # any structural/worsening event fast-rejects inside the
+                # policy itself (and counts in stats.repair_rejects), so
+                # the fallback shows up in engine metrics even if a future
+                # classifier bug ever left such a graph delta-dirty.
                 and self.engine.should_repair(
                     snap.dist.shape[-1], len(deltas),
                     successors=snap.succ is not None,
                     dtype=snap.dist.dtype,
                     threshold=self.repair_threshold,
+                    worsenings=self.registry.structural_count(gid),
                 )
             ):
                 repair_ids.append(gid)

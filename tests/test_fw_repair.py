@@ -199,6 +199,20 @@ def test_should_repair_crossover():
     assert not eng.should_repair(1024, 0)
 
 
+def test_should_repair_worsening_fast_reject():
+    """Edge worsenings fast-reject regardless of cost: repair only absorbs
+    ⊕-improvements, so even a 1-edge backlog with one worsening must take
+    the re-solve fallback — and the reject is visible in stats."""
+    from repro.apsp import ApspEngine
+
+    eng = ApspEngine(method="fused")
+    assert eng.should_repair(1024, 1)           # cheap AND sound → repair
+    assert eng.stats.repair_rejects == 0
+    assert not eng.should_repair(1024, 1, worsenings=1)
+    assert not eng.should_repair(1024, 3, worsenings=2)
+    assert eng.stats.repair_rejects == 2
+
+
 def test_repair_rejects_bad_inputs():
     from repro.apsp import ApspEngine
 

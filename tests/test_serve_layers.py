@@ -228,6 +228,39 @@ def test_update_edge_routes_through_repair():
     assert router.engine.stats.solves == solves + 2  # check-solve + refresh
 
 
+def test_worsening_takes_resolve_fallback_not_repair():
+    """Regression (ISSUE 8 satellite): a worsened edge must refresh through
+    a full re-solve — never the rank-1 repair — and the stats must show the
+    fallback was taken.  The registry counts worsening events per graph
+    (``structural_count``) and refresh feeds them into
+    ``should_repair(worsenings=…)``, so the fast-reject holds even if a
+    classification bug ever left such a graph delta-dirty."""
+    rng = np.random.default_rng(5)
+    n = 48
+    w = rng.integers(1, 10**6, (n, n)).astype(np.float32)
+    w[rng.uniform(size=(n, n)) > 0.4] = np.inf
+    np.fill_diagonal(w, 0.0)
+
+    router = RoutingEngine(method="fused")
+    router.add_graph("g", w)
+    router.refresh()
+    repairs = router.repair_refreshes
+    solves = router.solve_refreshes
+
+    router.fail_link("g", 3, 7)  # removal = worsening = structural
+    assert router.registry.dirty_kind("g") == STRUCTURAL
+    assert router.registry.structural_count("g") == 1
+    router.refresh()
+    assert router.repair_refreshes == repairs      # repair NOT taken
+    assert router.solve_refreshes == solves + 1    # re-solve fallback taken
+    assert router.registry.structural_count("g") == 0  # cleared with dirty
+
+    # The belt itself: with worsenings pending, the policy says no even for
+    # a backlog it would otherwise happily repair.
+    assert not router.engine.should_repair(n, 1, worsenings=1)
+    assert router.engine.stats.repair_rejects >= 1
+
+
 def test_routing_eviction_end_to_end():
     """Over-capacity tables evict (next cycle), evicted graphs re-solve on
     demand, and weights survive eviction."""
