@@ -19,8 +19,10 @@ trajectory is machine-trackable across PRs.
                      correctness + VMEM-footprint arithmetic; see
                      EXPERIMENTS.md §Perf for the roofline-side analysis)
   fw_fused         — the fused one-dispatch-per-round kernel at the Table-1
-                     sizes (+ achieved-bandwidth and int16/bf16 dtype rows),
-                     plus the plan.autotune_fw measured sweep over
+                     sizes (+ achieved-bandwidth, int16/bf16 dtype rows, and
+                     backend=gpu_interp rows running the Triton lowering
+                     through the Pallas interpreter), plus the
+                     plan.autotune_fw measured sweep over
                      (block_size, bm, bn, bk) round configs
   fw_packed        — bit-packed or_and transitive closure (32 graphs per
                      int32 lane) vs unpacked f32 or_and at n=1024
@@ -247,6 +249,11 @@ SWEEP_N = 256
 # Table-1 sizes (ISSUE 6 — bytes-per-round as a planning axis).
 DTYPE_SIZES = (256, 1024)
 DTYPES = ("int16", "bfloat16")
+# Backend-parity ladder (ISSUE 9): the same fused solve through the Triton
+# round in Pallas interpret mode — what a GPU-less container can execute.
+# The wall number tracks the interpreter; the bitwise gpu==ref guard lives
+# in --smoke and tests/test_fw_round_gpu.py.
+GPU_INTERP_SIZES = (256, 512)
 
 
 def _sweep_cfgs():
@@ -314,6 +321,21 @@ def bench_fw_fused():
                     f"{plan.word_for(dname)}B",
                 ))
 
+    # Backend-parity rows: the Triton lowering of the fused round, run
+    # through the Pallas interpreter (no GPU attached here).  Keyed by
+    # backend= so the TPU/GPU rows never collide in BENCH_fw.json.
+    for n in GPU_INTERP_SIZES:
+        w = random_digraph(n, density=1.0, seed=n)
+        s = min(128, n)
+        tg = fw_table1._time(
+            lambda w=w, s=s: solve(
+                w, method="fused", block_size=s, backend="gpu",
+                validate=False,
+            ).dist,
+        )
+        rows.append(("fw_fused/solve", f"backend=gpu_interp,n={n}", tg * 1e6,
+                     f"{n**3/tg/1e9:.2f}Gtasks/s,triton_interpret"))
+
     # plan.autotune_fw measured sweep: both round lowerings, ranked.
     w = jnp.asarray(random_digraph(SWEEP_N, density=1.0, seed=SWEEP_N))
 
@@ -334,7 +356,8 @@ def bench_fw_fused():
         flag = "best," if c is best else ""
         rows.append((_cfg_key(c).split("[")[0], f"n={SWEEP_N}", c["us"],
                      f"{flag}{c['dispatches_per_round']}disp,"
-                     f"vmem={c['vmem_bytes']/1024:.0f}KB"))
+                     f"vmem={c['vmem_bytes']/1024:.0f}KB,"
+                     f"backend={c['backend']}"))
     return rows
 
 
@@ -576,6 +599,8 @@ def expected_keys() -> dict[str, list[str]]:
             + [f"fw_fused/hbm_gbps[n={n}]" for n in FUSED_SIZES]
             + [f"fw_fused/solve[n={n},dtype={d}]"
                for n in DTYPE_SIZES for d in DTYPES]
+            + [f"fw_fused/solve[backend=gpu_interp,n={n}]"
+               for n in GPU_INTERP_SIZES]
             + [_cfg_key(c) for c in _sweep_cfgs()]
         ),
         "fw_packed": [
@@ -613,6 +638,24 @@ def smoke() -> None:
     want = np.asarray(fw_naive(jnp.asarray(w)))
     np.testing.assert_allclose(np.asarray(res.dist), want, rtol=1e-5, atol=1e-5)
     print("smoke: fused solve matches naive oracle (n=48, padded)")
+
+    # The backend-parity guard (ISSUE 9): the Triton lowering of the fused
+    # round (interpret mode here — no GPU) must reproduce the ref lowering
+    # bitwise, distances and successors.
+    gpu = solve(w, method="fused", block_size=32, backend="gpu",
+                validate=False)
+    if not np.array_equal(np.asarray(gpu.dist), np.asarray(res.dist)):
+        sys.exit("smoke: Triton fused round diverges from the ref lowering")
+    gs = solve(w, method="fused", block_size=32, backend="gpu",
+               successors=True, validate=False)
+    rs = solve(w, method="fused", block_size=32, backend="ref",
+               successors=True, validate=False)
+    if not (np.array_equal(np.asarray(gs.dist), np.asarray(rs.dist))
+            and np.array_equal(np.asarray(gs.succ), np.asarray(rs.succ))):
+        sys.exit("smoke: Triton successor round diverges from the ref "
+                 "lowering")
+    print("smoke: Triton fused round == ref lowering "
+          "(dist AND succ, bitwise, interpret)")
 
     # The fw_batched guard: the fused batch grid must reproduce B separate
     # fused solves BITWISE (batching is scheduling, never numerics) and the

@@ -51,7 +51,7 @@ from repro.core.semiring import (
     lower_semiring,
 )
 from repro.core.staged import fw_staged, fw_staged_with_successors
-from repro.kernels.ops import default_interpret as _default_interpret
+from repro.utils import compat
 
 METHODS = (
     "auto", "numpy", "naive", "blocked", "staged", "fused", "recursive",
@@ -286,6 +286,20 @@ def _check_successor_args(meth: str, semiring: Semiring) -> None:
         )
 
 
+def _resolve_backend(backend: str, interpret: bool | None) -> str:
+    """The solver's backend policy on top of ``compat.resolve_pallas_backend``.
+
+    One historical wrinkle: an *explicit* ``interpret=`` under
+    ``backend="auto"`` has always meant "run the TPU Pallas lowering with
+    that interpret flag" (the tests drive the kernels that way on CPU), so
+    auto only falls back to "ref" when interpret is left unset.
+    """
+    be = compat.resolve_pallas_backend(backend)
+    if backend == "auto" and interpret is not None and be == "ref":
+        be = "tpu"
+    return be
+
+
 def solve(
     w,
     *,
@@ -300,6 +314,7 @@ def solve(
     row_axes="data",
     col_axes="model",
     variant: str = "fori",
+    backend: str = "auto",
     interpret: bool | None = None,
     leaf: int | None = None,
     hbm_budget: int | None = None,
@@ -352,6 +367,13 @@ def solve(
        only; forces a host sync).
     mesh/row_axes/col_axes: device mesh for method="distributed".
     variant/interpret: staged-kernel lowering knobs (passed through).
+    backend: which Pallas lowering runs the staged/fused round — "auto"
+       (default: resolve from ``jax.default_backend()`` — TPU Pallas on
+       TPU, the Triton round on GPU, the bitwise XLA ref twin elsewhere),
+       or pin "tpu" | "gpu" | "ref" explicitly.  All three produce bitwise
+       identical closures; pinning "gpu" (or "tpu") off-hardware runs that
+       lowering under the Pallas interpreter.  Threaded through
+       ``ApspEngine``'s plan key and ``plan.fw_candidates(backend=)``.
     leaf: pivot-panel width for method="recursive" (multiple of block_size;
        None = ``plan.recursive_plan``'s pick — budget-fattest power of two
        when out of core, 4·block_size in core).
@@ -388,7 +410,7 @@ def solve(
         inner = solve(
             words, method=method, semiring=sr, block_size=block_size,
             validate=False, mesh=mesh, row_axes=row_axes, col_axes=col_axes,
-            variant=variant, interpret=interpret,
+            variant=variant, backend=backend, interpret=interpret,
         )
         dist = unpack_reachability(inner.dist, count=count, dtype=arr.dtype)
         if not in_batched:
@@ -407,6 +429,9 @@ def solve(
 
     if successors:
         _check_successor_args(meth, sr)
+    # Validate eagerly even on paths (blocked/numpy/...) that never reach
+    # the staged round, so a typo'd backend= fails loudly.
+    compat.resolve_pallas_backend(backend)
     if meth == "distributed" and mesh is None:
         raise ValueError("method='distributed' requires a mesh")
     if meth == "numpy" and sr is not MIN_PLUS:
@@ -441,15 +466,16 @@ def solve(
         elif meth in ("staged", "fused"):
             # Natively batched: a (B, m, m) input threads the kernels'
             # leading batch grid dimension — one dispatch per round for the
-            # whole batch, not a vmap that replays rounds per graph.  With
-            # no TPU and no explicit interpret request, the fused round runs
-            # its bitwise XLA lowering instead of the Pallas interpreter
-            # (kernels.ref — execution-grade on CPU, same op chains).
-            use_ref = interpret is None and _default_interpret()
+            # whole batch, not a vmap that replays rounds per graph.  The
+            # resolved backend picks the round lowering: TPU Pallas, the
+            # Triton round, or the bitwise XLA ref twin (what auto lands on
+            # for CPU, where the Pallas interpreter's grid emulation would
+            # dominate wall-clock) — same op chains either way.
+            be = _resolve_backend(backend, interpret)
             if successors:
                 dist, succ = fw_staged_with_successors(
                     wp, block_size=s, interpret=interpret,
-                    lowering="ref" if use_ref else "pallas",
+                    lowering={"tpu": "pallas", "gpu": "gpu", "ref": "ref"}[be],
                 )
             else:
                 # "staged" leaves the round lowering to fw_staged (fused by
@@ -457,8 +483,9 @@ def solve(
                 dist = fw_staged(
                     wp, block_size=s, semiring=sr, variant=variant,
                     interpret=interpret,
-                    fused="ref" if use_ref
-                    else (True if meth == "fused" else None),
+                    fused={"ref": "ref", "gpu": "gpu"}.get(
+                        be, True if meth == "fused" else None
+                    ),
                 )
         elif meth == "recursive":
             # R-Kleene panel schedule: plan picks the leaf and decides

@@ -69,7 +69,10 @@ class PlanKey:
     ``mesh`` is the mesh signature for distributed entries — the
     ((axis, size), …) grid plus the row/col axis split — so the same
     engine can serve several meshes without executable collisions; None
-    for single-device methods.
+    for single-device methods.  ``backend`` is the *resolved* round
+    lowering ("tpu" | "gpu" | "ref", never "auto") — engines pinned to
+    different backends never share executables, and the stamp is the
+    provenance the benchmarks persist per key.
     """
 
     n_padded: int
@@ -85,6 +88,7 @@ class PlanKey:
     edges: int = 0  # repair entries: the padded edge-batch bucket E
     leaf: int | None = None  # recursive entries: pivot-panel width
     oocore: bool = False     # recursive entries: host-resident panel store
+    backend: str = "tpu"     # resolved round lowering (tpu | gpu | ref)
 
 
 @dataclasses.dataclass
@@ -140,6 +144,7 @@ class ApspEngine:
         batch_block: int | None = None,
         variant: str = "fori",
         validate: bool = True,
+        backend: str = "auto",
         interpret: bool | None = None,
         vmem_budget: int = 128 << 20,
         mesh=None,
@@ -169,6 +174,14 @@ class ApspEngine:
         signature), and ``solve_many`` buckets shard across devices without
         retracing.  Distributed solves do not track successors.
 
+        backend pins the round lowering for the staged/fused methods —
+        "auto" (resolve from the attached hardware, exactly like
+        ``api.solve``), "tpu", "gpu" (the Triton round; interpreted when
+        no GPU is attached), or "ref".  The resolved value is part of
+        every plan key, so engines on different backends never share
+        executables and each backend keeps its own warm-cache no-retrace
+        guarantee.
+
         leaf/hbm_budget/devices configure method="recursive" (the R-Kleene
         panel schedule of ``apsp.kleene``): ``hbm_budget`` also promotes
         the in-core tiled methods to recursive whenever the padded matrix
@@ -195,6 +208,10 @@ class ApspEngine:
         self.variant = variant
         self.validate = validate
         self.interpret = interpret
+        from repro.apsp.api import _resolve_backend
+
+        self.backend = backend
+        self._backend = _resolve_backend(backend, interpret)
         self.vmem_budget = vmem_budget
         self.mesh = mesh
         self.row_axes = row_axes
@@ -293,6 +310,7 @@ class ApspEngine:
             mesh=self._mesh_sig if meth == "distributed" else None,
             leaf=rec_plan["leaf"] if rec_plan else None,
             oocore=rec_plan["out_of_core"] if rec_plan else False,
+            backend=self._backend,
         )
         entry = self._cache.get(key)
         if entry is not None:
@@ -406,35 +424,47 @@ class ApspEngine:
             else:
                 fn = lambda x: fw_blocked(x, block_size=s, semiring=sr)
         else:  # staged / fused — the kernels' native batch grid
-            # Same lowering policy as api.solve: no TPU and no explicit
-            # interpret request → the fused round's bitwise XLA lowering.
-            from repro.kernels.ops import default_interpret
-
-            use_ref = interpret is None and default_interpret()
+            # Same lowering policy as api.solve: the key's resolved backend
+            # picks the round lowering (TPU Pallas / Triton / XLA ref twin).
+            be = key.backend
             if key.successors:
                 fn = lambda x: fw_staged_with_successors(
                     x, block_size=s, batch_block=bb, interpret=interpret,
-                    lowering="ref" if use_ref else "pallas",
+                    lowering={"tpu": "pallas", "gpu": "gpu", "ref": "ref"}[be],
                 )
             else:
                 fn = lambda x: fw_staged(
                     x, block_size=s, bk=bk, batch_block=bb,
                     variant=self.variant, semiring=sr, interpret=interpret,
-                    fused="ref" if use_ref
-                    else (True if key.method == "fused" else None),
+                    fused={"ref": "ref", "gpu": "gpu"}.get(
+                        be, True if key.method == "fused" else None
+                    ),
                 )
 
         entry = ExecutablePlan(key=key, runner=None)
         if key.method in ("staged", "fused"):
             scale = 2 if key.successors else 1
             word = jnp.dtype(key.dtype).itemsize
-            entry.vmem_bytes = scale * plan.fused_round_vmem_bytes(
-                key.n_padded, s, bk, word=word, variant=self.variant,
-                batch=bb or 1,
-            )
-            entry.hbm_bytes_per_round = scale * plan.fused_round_hbm_bytes(
-                key.n_padded, s, word=word, batch=key.batch,
-            )
+            if key.backend == "gpu":
+                # Triton round: the on-chip model is the per-SM SMEM working
+                # set, and the HBM model carries the band buffers' GMEM
+                # round-trips (no VMEM scratch exists to charge).
+                entry.vmem_bytes = scale * plan.gpu_round_smem_bytes(
+                    s, bk, word=word, variant=self.variant,
+                )
+                entry.hbm_bytes_per_round = scale * plan.gpu_round_hbm_bytes(
+                    key.n_padded, s, word=word, batch=key.batch,
+                )
+            else:
+                # "tpu" — and "ref", whose XLA twin replays the fused
+                # schedule, so the TPU models still describe the plan.
+                entry.vmem_bytes = scale * plan.fused_round_vmem_bytes(
+                    key.n_padded, s, bk, word=word, variant=self.variant,
+                    batch=bb or 1,
+                )
+                entry.hbm_bytes_per_round = scale * plan.fused_round_hbm_bytes(
+                    key.n_padded, s, word=word, batch=key.batch,
+                )
 
         def traced(wp):
             # Runs only while JAX traces (i.e. on compile) — the cache-hit
@@ -601,7 +631,7 @@ class ApspEngine:
             block_size=s, bk=0, batch_block=None,
             successors=succ is not None,
             mesh=self._mesh_sig if self.method == "distributed" else None,
-            edges=E_pad,
+            edges=E_pad, backend=self._backend,
         )
         entry = self._cache.get(key)
         if entry is not None:

@@ -228,6 +228,54 @@ def distributed_plan(
     )
 
 
+# Per-SM shared memory of an A100/H100-class part — the GPU analogue of the
+# 128 MB VMEM budget.  The paper's whole contribution is trimming this very
+# working set so more blocks co-reside per SM; the occupancy field of the
+# GPU candidates is that trade made explicit.
+GPU_SMEM_BUDGET = 164 << 10
+
+
+def gpu_round_smem_bytes(
+    s: int, bk: int, *, word: int = 4, variant: str = "fori",
+    successors: bool = False,
+) -> int:
+    """On-chip working set per grid step of the Triton fused round
+    (``kernels.fw_round_gpu``) — the GPU side of ``fused_round_vmem_bytes``.
+
+    Unlike the TPU kernel there is no persistent scratch: the closed bands
+    live in GMEM outputs, so the per-step footprint is just the (s,s) tile
+    plus its accumulator copy (2·s² words, registers/shared) and the
+    double-buffered bk-deep band slices the phase-3 relaxation streams
+    (2·(s·bk + bk·s) words — the paper's shared-memory staging depth).  The
+    "broadcast" variant materializes the (s, bk, s) product transient;
+    successor tracking doubles everything (distance + next-hop tiles).
+    """
+    scale = 2 if successors else 1
+    tiles = 2 * s * s
+    slices = 2 * (s * bk + bk * s)
+    transient = s * bk * s if variant == "broadcast" else 0
+    return scale * (tiles + slices + transient) * word
+
+
+def gpu_round_hbm_bytes(
+    n: int, s: int, *, word: int = 4, batch: int = 1
+) -> float:
+    """HBM traffic for ONE GPU fused round.
+
+    The TPU tile traffic (``fused_round_hbm_bytes``) plus the band buffers'
+    GMEM round-trips — on the Triton backend the closed pivot bands are
+    outputs, not VMEM scratch, so phases 1-2 write 2T band tiles, phase 2
+    re-reads the closed diagonal 2(T-1) times, and every phase-3 step reads
+    one (s,s) slice of each band: (2T + 2(T-1) + 2T²)·s² extra words.  This
+    asymmetry against the TPU model is exactly why ``autotune_fw`` must
+    rank within a backend rather than across.
+    """
+    T = padded_size(n, s) // s
+    bands = (2 * T + 2 * (T - 1) + 2 * T * T) * s * s
+    return fused_round_hbm_bytes(n, s, word=word, batch=batch) \
+        + float(batch * bands * word)
+
+
 def phase3_vmem_bytes(
     bm: int, bn: int, bk: int, *, word: int = 4, fused: bool = False
 ) -> int:
@@ -366,8 +414,10 @@ def auto_batch_block(
 def fw_candidates(
     n: int,
     *,
+    backend: str = "tpu",
     batch: int = 1,
     vmem_budget: int = 128 << 20,
+    smem_budget: int = GPU_SMEM_BUDGET,
     word: int | None = None,
     dtype=None,
     lanes: int = 1,
@@ -404,14 +454,81 @@ def fw_candidates(
     ``recursive_transfer_bytes``.  Every candidate carries
     ``total_bytes = hbm_bytes_total + pcie_bytes_total`` — the ranking key
     ``autotune_fw`` uses, which is what picks the leaf size.
+
+    ``backend`` selects whose on-chip arithmetic filters the pool (every
+    candidate is stamped with it):
+
+      * ``"tpu"`` — the historical set: fused (VMEM scratch model), staged,
+        and recursive candidates against ``vmem_budget``.
+      * ``"gpu"`` — fused candidates ONLY (the Triton round is the one GPU
+        lowering), filtered by ``gpu_round_smem_bytes`` against
+        ``smem_budget`` with an ``occupancy`` field (blocks co-resident per
+        SM — the paper's figure of merit) and HBM bytes from
+        ``gpu_round_hbm_bytes`` (band GMEM traffic included); a
+        ``num_warps`` occupancy hint rides along.
+      * ``"ref"`` — fused candidates with NO on-chip filter (the XLA twin
+        has no scratch); byte models as the TPU fused schedule.
+
+    VMEM-model arithmetic never leaks into a non-TPU pool: the GPU/ref
+    candidates carry ``vmem_bytes=0`` and their own filters.
     """
     if word is None:
         word = word_for(dtype)
     if lanes < 1:
         raise ValueError(f"lanes must be >= 1, got {lanes}")
+    if backend not in ("tpu", "gpu", "ref"):
+        raise ValueError(
+            f"unknown backend {backend!r} for fw_candidates; "
+            f"have ('tpu', 'gpu', 'ref')"
+        )
     if hbm_budget is not None:
         include_recursive = True
     out = []
+    if backend != "tpu":
+        for s in block_sizes:
+            if s > max(n, 16):
+                continue
+            sp = min(s, n)
+            m = padded_size(n, sp)
+            if hbm_budget is not None and batch * m * m * word > hbm_budget:
+                continue
+            rounds = m // sp
+            for bk in bks:
+                if bk > sp:
+                    continue
+                if backend == "gpu":
+                    smem = gpu_round_smem_bytes(
+                        sp, bk, word=word, variant=variant
+                    )
+                    if smem > smem_budget:
+                        continue
+                    per_round = gpu_round_hbm_bytes(
+                        m, sp, word=word, batch=batch
+                    )
+                    extra = dict(
+                        smem_bytes=smem,
+                        occupancy=max(1, smem_budget // smem),
+                        num_warps=4 if sp <= 64 else 8,
+                    )
+                else:
+                    per_round = fused_round_hbm_bytes(
+                        m, sp, word=word, batch=batch
+                    )
+                    extra = {}
+                out.append(dict(
+                    impl="fused", backend=backend, block_size=sp, bm=sp,
+                    bn=sp, bk=bk, batch=batch, batch_block=batch, word=word,
+                    lanes=lanes, vmem_bytes=0,
+                    hbm_bytes_per_round=per_round,
+                    hbm_bytes_total=rounds * per_round,
+                    hbm_bytes_per_graph=rounds * per_round / (batch * lanes),
+                    pcie_bytes_total=0.0,
+                    total_bytes=rounds * per_round,
+                    steps_per_round=fused_round_steps(m, sp, batch=1),
+                    dispatches_per_round=1,
+                    **extra,
+                ))
+        return out
     for s in block_sizes:
         if s > max(n, 16):
             continue
@@ -437,7 +554,8 @@ def fw_candidates(
             if v <= vmem_budget:
                 per_round = fused_round_hbm_bytes(m, sp, word=word, batch=batch)
                 out.append(dict(
-                    impl="fused", block_size=sp, bm=sp, bn=sp, bk=bk,
+                    impl="fused", backend="tpu", block_size=sp, bm=sp,
+                    bn=sp, bk=bk,
                     batch=batch, batch_block=bb, word=word, lanes=lanes,
                     vmem_bytes=v,
                     hbm_bytes_per_round=per_round,
@@ -458,7 +576,8 @@ def fw_candidates(
                         m, m, sp, bm=bm, bn=bm, word=word
                     )
                     out.append(dict(
-                        impl="staged", block_size=sp, bm=bm, bn=bm, bk=bk,
+                        impl="staged", backend="tpu", block_size=sp, bm=bm,
+                        bn=bm, bk=bk,
                         batch=batch, batch_block=1, word=word, lanes=lanes,
                         vmem_bytes=v3,
                         hbm_bytes_per_round=per_round,
@@ -488,7 +607,8 @@ def fw_candidates(
                     continue
                 total = rp["hbm_bytes_total"] + rp["transfer_bytes"]
                 out.append(dict(
-                    impl="recursive", block_size=sp, bm=sp, bn=sp,
+                    impl="recursive", backend="tpu", block_size=sp, bm=sp,
+                    bn=sp,
                     bk=min(32, sp), batch=batch, batch_block=1, word=word,
                     lanes=lanes, leaf=rp["leaf"],
                     out_of_core=rp["out_of_core"],
@@ -512,8 +632,10 @@ def autotune_fw(
     n: int,
     measure=None,
     *,
+    backend: str = "tpu",
     batch: int = 1,
     vmem_budget: int = 128 << 20,
+    smem_budget: int = GPU_SMEM_BUDGET,
     dtype=None,
     lanes: int = 1,
     variant: str = "fori",
@@ -541,8 +663,13 @@ def autotune_fw(
     out-of-core candidates join the pool, and the model ranking switches
     to *total* (HBM + PCIe) bytes — which is what picks the leaf size (the
     fattest resident leaf minimizes streamed bytes at ≈ 2·m³/leaf).
+    ``backend`` resolves the candidate pool (``fw_candidates(backend=)``)
+    and every returned dict is stamped with it — ranking happens WITHIN a
+    backend (TPU VMEM vs GPU SMEM byte models are not commensurable), and
+    the stamp is the per-key provenance the benchmarks persist.
     """
-    cands = fw_candidates(n, batch=batch, vmem_budget=vmem_budget,
+    cands = fw_candidates(n, backend=backend, batch=batch,
+                          vmem_budget=vmem_budget, smem_budget=smem_budget,
                           dtype=dtype, lanes=lanes, variant=variant,
                           hbm_budget=hbm_budget)
     if not cands:

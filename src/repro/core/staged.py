@@ -92,15 +92,17 @@ def fw_staged(
       which preserves the seed lowering exactly.  ``"ref"`` runs the fused
       round's execution-grade XLA lowering (``kernels.ref.fw_round_ref``) —
       what ``solve`` picks on CPU, where the Pallas interpreter's grid
-      emulation would dominate wall-clock.  Outputs are bit-identical
+      emulation would dominate wall-clock.  ``"gpu"`` runs the Triton
+      lowering (``kernels.fw_round_gpu``; ``interpret=None`` there
+      auto-interprets when no GPU is attached).  Outputs are bit-identical
       across all of them.
     """
-    if interpret is None:
+    if fused is None:
+        fused = not unroll_rounds
+    if interpret is None and fused != "gpu":
         from repro.kernels.ops import default_interpret
 
         interpret = default_interpret()
-    if fused is None:
-        fused = not unroll_rounds
     n = w.shape[-1]
     s = block_size
     if w.ndim not in (2, 3) or w.shape[-2] != n:
@@ -121,6 +123,14 @@ def fw_staged(
                 return fw_round_ref(
                     w, b, block_size=s, bk=bk_eff, variant=variant,
                     semiring=semiring,
+                )
+        elif fused == "gpu":
+            from repro.kernels.fw_round_gpu import fw_round_gpu
+
+            def round_body(b, w):
+                return fw_round_gpu(
+                    w, b, block_size=s, bk=bk_eff, batch_block=batch_block,
+                    variant=variant, semiring=semiring, interpret=interpret,
                 )
         else:
             def round_body(b, w):
@@ -187,12 +197,12 @@ def fw_staged_with_successors(
     Returns (dist, succ): succ[..., i, j] = next vertex after i on the
     shortest i→j path, -1 where no path exists.  One ``pallas_call`` per
     round for the whole batch (``lowering="ref"`` swaps in the bitwise
-    XLA lowering, for CPU execution); outputs bit-match
-    ``core.paths.fw_blocked_with_successors`` per graph.
+    XLA lowering, for CPU execution; ``lowering="gpu"`` the Triton round);
+    outputs bit-match ``core.paths.fw_blocked_with_successors`` per graph.
     """
     from repro.core.paths import _init_successors
 
-    if interpret is None:
+    if interpret is None and lowering != "gpu":
         from repro.kernels.ops import default_interpret
 
         interpret = default_interpret()
@@ -209,6 +219,14 @@ def fw_staged_with_successors(
 
         def round_body(b, carry):
             return fw_round_with_successors_ref(*carry, b, block_size=s)
+    elif lowering == "gpu":
+        from repro.kernels.fw_round_gpu import fw_round_with_successors_gpu
+
+        def round_body(b, carry):
+            return fw_round_with_successors_gpu(
+                *carry, b, block_size=s, batch_block=batch_block,
+                interpret=interpret,
+            )
     else:
         def round_body(b, carry):
             return fw_round_with_successors(

@@ -248,12 +248,7 @@ def fw_repair(
         interpret = default_interpret()
     s = block_size
     n, E = _check_args(d, u, v, w, s)
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-    except Exception as e:  # pragma: no cover - pallas TPU module absent
-        raise NotImplementedError(
-            "fw_repair needs pallas TPU scratch + scalar prefetch"
-        ) from e
+    pltpu = compat.pallas_tpu("fw_repair needs pallas TPU scratch + scalar prefetch")
     T = n // s
     u = jnp.asarray(u, jnp.int32)
     v = jnp.asarray(v, jnp.int32)
@@ -306,12 +301,7 @@ def fw_repair_with_successors(
     n, E = _check_args(d, u, v, w, s)
     if succ.shape != d.shape:
         raise ValueError(f"succ must match d, got {succ.shape} vs {d.shape}")
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-    except Exception as e:  # pragma: no cover - pallas TPU module absent
-        raise NotImplementedError(
-            "fw_repair_with_successors needs pallas TPU scratch"
-        ) from e
+    pltpu = compat.pallas_tpu("fw_repair_with_successors needs pallas TPU scratch")
     T = n // s
     u = jnp.asarray(u, jnp.int32)
     v = jnp.asarray(v, jnp.int32)

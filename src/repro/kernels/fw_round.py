@@ -142,6 +142,65 @@ def _bordered_order(tr: int, tc: int) -> tuple[jax.Array, jax.Array]:
     return oi, oj
 
 
+# --------------------------------------------------------- phase recurrences
+# The per-phase ⊕/⊗ chains, factored out of the kernel bodies so the TPU
+# round (_round_kernel below) and the GPU round (kernels/fw_round_gpu.py)
+# run the IDENTICAL per-element op sequence — bit-equality across backends
+# holds by construction, not by parallel maintenance.  All four are
+# ellipsis-indexed: the same chain runs with or without a leading batch dim.
+
+
+def _close_diag(t: jax.Array, s: int, semiring: Semiring) -> jax.Array:
+    """Phase 1: close an (s,s) diagonal tile under k ∈ [0, s)."""
+
+    def body(k, t):
+        return semiring.add(
+            t, semiring.mul(t[..., :, k, None], t[..., k, None, :])
+        )
+
+    return jax.lax.fori_loop(0, s, body, t)
+
+
+def _close_row_panel(
+    p: jax.Array, d: jax.Array, s: int, semiring: Semiring
+) -> jax.Array:
+    """Phase 2 (row band): rows live in the pivot block → a-side is ``d``."""
+
+    def body(k, p):
+        return semiring.add(
+            p, semiring.mul(d[..., :, k, None], p[..., k, None, :])
+        )
+
+    return jax.lax.fori_loop(0, s, body, p)
+
+
+def _close_col_panel(
+    p: jax.Array, d: jax.Array, s: int, semiring: Semiring
+) -> jax.Array:
+    """Phase 2 (col band): columns live in the pivot block → b-side is ``d``."""
+
+    def body(k, p):
+        return semiring.add(
+            p, semiring.mul(p[..., :, k, None], d[..., k, None, :])
+        )
+
+    return jax.lax.fori_loop(0, s, body, p)
+
+
+def _relax_tile(
+    c: jax.Array, a: jax.Array, bb: jax.Array, s: int, bk: int,
+    semiring: Semiring, variant: Variant,
+) -> jax.Array:
+    """Phase 3: relax one tile against the closed bands, bk-chunk staged —
+    the exact ``_stage_compute`` sequence of ``semiring_matmul``'s k grid."""
+    for k0 in range(0, s, bk):
+        c = _stage_compute(
+            c, a[..., :, k0:k0 + bk], bb[..., k0:k0 + bk, :],
+            semiring, variant,
+        )
+    return c
+
+
 def _round_kernel(
     oi_ref, oj_ref, own_ref, w_ref, o_ref, row_ref, col_ref,
     *, tr: int, tc: int, s: int, bk: int, semiring: Semiring,
@@ -170,12 +229,7 @@ def _round_kernel(
 
     @pl.when(g == 0)
     def _phase1():
-        def body(k, t):
-            return semiring.add(
-                t, semiring.mul(t[..., :, k, None], t[..., k, None, :])
-            )
-
-        t = jax.lax.fori_loop(0, s, body, w_ref[...])
+        t = _close_diag(w_ref[...], s, semiring)
         o_ref[...] = t
         # Seed both scratch bands with the closed diagonal: phase-3 steps can
         # then read A/B slices unconditionally at any tile index, pivot
@@ -186,13 +240,7 @@ def _round_kernel(
     @pl.when((g >= 1) & (g < tc))
     def _phase2_row():
         d = pl.load(row_ref, lead + (slice(None), pl.dslice(b * s, s)))
-
-        def body(k, p):
-            return semiring.add(
-                p, semiring.mul(d[..., :, k, None], p[..., k, None, :])
-            )
-
-        p = jax.lax.fori_loop(0, s, body, w_ref[...])
+        p = _close_row_panel(w_ref[...], d, s, semiring)
         # Owner echo: the tile at border column pc is the device's broadcast
         # copy of the raw diagonal — its closed value is the phase-1 closure,
         # not the phase-2 recurrence (they differ for non-idempotent ⊕).
@@ -203,13 +251,7 @@ def _round_kernel(
     @pl.when((g >= tc) & (g < tc + tr - 1))
     def _phase2_col():
         d = pl.load(row_ref, lead + (slice(None), pl.dslice(b * s, s)))
-
-        def body(k, p):
-            return semiring.add(
-                p, semiring.mul(p[..., :, k, None], d[..., k, None, :])
-            )
-
-        p = jax.lax.fori_loop(0, s, body, w_ref[...])
+        p = _close_col_panel(w_ref[...], d, s, semiring)
         p = jnp.where(i == pr, d, p)
         o_ref[...] = p
         pl.store(col_ref, lead + (pl.dslice(i * s, s), slice(None)), p)
@@ -225,12 +267,7 @@ def _round_kernel(
             (i == b) | (i == pr), bb,
             jnp.where((j == b) | (j == pc), a, w_ref[...]),
         )
-        for k0 in range(0, s, bk):
-            c = _stage_compute(
-                c, a[..., :, k0:k0 + bk], bb[..., k0:k0 + bk, :],
-                semiring, variant,
-            )
-        o_ref[...] = c
+        o_ref[...] = _relax_tile(c, a, bb, s, bk, semiring, variant)
 
 
 def _relax_succ(k, t, ts, a, asucc, bb):
@@ -405,12 +442,7 @@ def fw_round(
         raise ValueError(
             f"w must be (n,n) or (B,n,n) with n % {s} == 0, got {w.shape}"
         )
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-    except Exception as e:  # pragma: no cover - pallas TPU module absent
-        raise NotImplementedError(
-            "fw_round needs pallas TPU scratch + scalar prefetch"
-        ) from e
+    pltpu = compat.pallas_tpu("fw_round needs pallas TPU scratch + scalar prefetch")
     T = n // s
     bk = _fit_block(s, bk)
     oi, oj = _round_order(b, T)
@@ -522,12 +554,9 @@ def fw_round_bordered(
             f"w must be (rows,cols) or (B,rows,cols) with both dims a "
             f"multiple of {s}, got {w.shape}"
         )
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-    except Exception as e:  # pragma: no cover - pallas TPU module absent
-        raise NotImplementedError(
-            "fw_round_bordered needs pallas TPU scratch + scalar prefetch"
-        ) from e
+    pltpu = compat.pallas_tpu(
+        "fw_round_bordered needs pallas TPU scratch + scalar prefetch"
+    )
     tr, tc = rows // s, cols // s
     bk = _fit_block(s, bk)
     oi, oj = _bordered_order(tr, tc)
@@ -608,12 +637,7 @@ def fw_round_with_successors(
         )
     if succ.shape != w.shape:
         raise ValueError(f"succ shape {succ.shape} != w shape {w.shape}")
-    try:
-        from jax.experimental.pallas import tpu as pltpu
-    except Exception as e:  # pragma: no cover - pallas TPU module absent
-        raise NotImplementedError(
-            "fw_round_with_successors needs pallas TPU scratch"
-        ) from e
+    pltpu = compat.pallas_tpu("fw_round_with_successors needs pallas TPU scratch")
     T = n // s
     oi, oj = _round_order(b, T)
     word = jnp.dtype(w.dtype).itemsize + jnp.dtype(succ.dtype).itemsize

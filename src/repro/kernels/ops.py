@@ -25,6 +25,12 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+@functools.cache
+def default_gpu_interpret() -> bool:
+    """True when no GPU is present (interpret the Triton kernels on CPU)."""
+    return jax.default_backend() not in ("gpu", "cuda", "rocm")
+
+
 def minplus_matmul(
     a: jax.Array,
     b: jax.Array,

@@ -14,12 +14,28 @@ jax moved two APIs this codebase leans on:
     time (the flash_decode tier-1 failures) — ``tpu_compiler_params`` and
     ``vmem_scratch`` split the two concerns so a missing params class can
     never take the scratch wiring down with it.
+
+This module also owns **backend resolution** for the Pallas kernels:
+``resolve_pallas_backend`` maps a user-facing ``backend=`` argument
+("auto" | "tpu" | "gpu" | "ref") to the lowering the solver threads through
+``PlanKey`` and ``fw_staged(fused=)``, and ``pallas_tpu`` is the ONE lazy
+``jax.experimental.pallas.tpu`` import — kernels route through it so
+``import repro.kernels`` (and every module-level import in the library)
+succeeds on GPU-only and CPU-only jax installs, where the TPU pallas
+module may be absent.
 """
 from __future__ import annotations
 
 from typing import Any, Sequence
 
 import jax
+
+# The lowerings a Pallas-backed round can resolve to.  "ref" is the bitwise
+# XLA twin in kernels/ref.py — execution-grade on any backend.
+PALLAS_BACKENDS = ("tpu", "gpu", "ref")
+
+# jax.default_backend() spellings that mean "a real GPU is attached".
+_GPU_PLATFORMS = ("gpu", "cuda", "rocm")
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):
@@ -33,6 +49,77 @@ def shard_map(f, *, mesh, in_specs, out_specs):
     return _shard_map(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
     )
+
+
+def resolve_pallas_backend(backend: str = "auto") -> str:
+    """Resolve a user-facing ``backend=`` to a concrete round lowering.
+
+    "auto" reads ``jax.default_backend()``: "tpu" on a TPU, "gpu" when a
+    CUDA/ROCm device is attached, and "ref" (the bitwise XLA twin)
+    everywhere else — which is exactly the historical dispatch policy of
+    ``apsp.solve`` on this container.  Explicit values are validated and
+    passed through: ``backend="gpu"`` on a CPU host still runs the GPU
+    lowering, in Pallas interpret mode (``kernels.ops.default_gpu_interpret``),
+    which is how the bitwise test suite and CI exercise it without hardware.
+    """
+    if backend == "auto":
+        plat = jax.default_backend()
+        if plat == "tpu":
+            return "tpu"
+        if plat in _GPU_PLATFORMS:
+            return "gpu"
+        return "ref"
+    if backend not in PALLAS_BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; have "
+            f"{('auto',) + PALLAS_BACKENDS}"
+        )
+    return backend
+
+
+def pallas_tpu(need: str = "pallas TPU scratch + scalar prefetch") -> Any:
+    """The lazy ``jax.experimental.pallas.tpu`` import, shared by every
+    TPU kernel.
+
+    Raises ``NotImplementedError`` (naming what the caller ``need``-ed)
+    when the module is absent — GPU-only / CPU-only jax builds — so the
+    kernels stay importable everywhere and only *calling* a TPU lowering
+    without the TPU pallas module fails.
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu
+    except NotImplementedError:
+        raise
+    except Exception as e:  # pragma: no cover - pallas TPU module absent
+        raise NotImplementedError(f"{need} unavailable in this jax") from e
+
+
+def gpu_compiler_params(
+    *, num_warps: int | None = None, num_stages: int | None = None
+) -> Any | None:
+    """Pallas Triton CompilerParams under either name; None when unavailable.
+
+    A ``None`` return is safe to pass to ``pl.pallas_call`` — the GPU round
+    still lowers (and interpret mode ignores the params entirely), it just
+    loses the warp/stage occupancy hints.
+    """
+    try:
+        from jax.experimental.pallas import triton as pltriton
+    except Exception:  # pragma: no cover - pallas Triton module absent
+        return None
+    cls = getattr(pltriton, "CompilerParams", None) or getattr(
+        pltriton, "TritonCompilerParams", None
+    )
+    if cls is None:  # pragma: no cover - very old pallas
+        return None
+    kwargs = {}
+    if num_warps is not None:
+        kwargs["num_warps"] = num_warps
+    if num_stages is not None:
+        kwargs["num_stages"] = num_stages
+    return cls(**kwargs)
 
 
 def tpu_compiler_params(*, dimension_semantics: Sequence[str]) -> Any | None:
