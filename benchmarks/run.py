@@ -452,6 +452,70 @@ def bench_fw_repair():
     return rows
 
 
+def bench_fw_repair_del():
+    """Decremental (edge-deletion) repair vs full fused re-solve at n=1024.
+
+    The ISSUE 10 fast path: after deleting an edge that only a small
+    fraction of shortest paths route through, the two-stage repair (mark
+    the affected rows, then re-relax just that row strip through the
+    restricted fused sweep) beats re-running the full solve.  The edge is
+    chosen by sampling on-shortest-path candidates (``w[u,v] == dist[u,v]``)
+    and keeping the one whose witness count is smallest but nonzero, so the
+    measured point sits squarely in the regime the byte model
+    (plan.repair_del_hbm_bytes vs plan.fused_solve_hbm_bytes) says repair
+    should win.  Rows:
+
+      full_resolve      — the fused one-dispatch-per-round solve
+      repair            — warm two-stage repair_del (mark + row sweep)
+      affected_fraction — share of (i,j) pairs the deletion touched
+      speedup           — full_resolve / repair; acceptance bar ≥ 5× with
+                          ≤ 5% of pairs affected
+    """
+    from repro.apsp import ApspEngine
+    from repro.core.graph import random_digraph
+
+    rows = []
+    n = REPAIR_N
+    w = random_digraph(n, density=1.0, seed=n)
+    eng = ApspEngine(method="fused", validate=False)
+    r0 = eng.solve(w)
+    t_solve = fw_table1._time(lambda: eng.solve(w).dist, reps=2)
+    d0 = np.asarray(r0.dist)
+    w0 = np.asarray(w, dtype=d0.dtype)
+    # Sample on-path edges; keep the smallest nonzero affected-pair count.
+    on_path = np.argwhere(
+        (w0 == d0) & np.isfinite(w0)
+        & (np.arange(n)[:, None] != np.arange(n)[None, :]))
+    rng = np.random.default_rng(n)
+    picks = on_path[rng.choice(len(on_path), size=min(64, len(on_path)),
+                               replace=False)]
+    best, best_pairs = None, n * n + 1
+    for u, v in picks:
+        wit = d0[:, u, None] + w0[u, v] + d0[None, v, :]
+        pairs = int(np.count_nonzero((wit == d0) & np.isfinite(d0)))
+        if 0 < pairs < best_pairs:
+            best, best_pairs = (int(u), int(v)), pairs
+    u, v = best
+    frac = best_pairs / (n * n)
+    w1 = w0.copy()
+    w1[u, v] = np.inf
+    dels = [(u, v, float(w0[u, v]))]
+    eng.repair_del(r0.dist, w1, dels, threshold=1.0)  # compile once
+    t_rep = fw_table1._time(
+        lambda: eng.repair_del(r0.dist, w1, dels, threshold=1.0).dist, reps=3)
+    s = r0.block_size
+    a = int(eng.stats.repair_del_rows / max(eng.stats.repair_dels, 1))
+    rows.append(("fw_repair_del/full_resolve", f"n={n}", t_solve * 1e6,
+                 f"{n**3/t_solve/1e9:.2f}Gtasks/s"))
+    rows.append(("fw_repair_del/repair", f"n={n}", t_rep * 1e6,
+                 f"model={plan.repair_del_hbm_bytes(n, s, affected_rows=a)/1e6:.1f}MB,rows={a}"))
+    rows.append(("fw_repair_del/affected_fraction", f"n={n}", frac * 100,
+                 f"target<=5pct,pairs={best_pairs},edge=({u},{v})"))
+    rows.append(("fw_repair_del/speedup", f"n={n}", t_solve / t_rep,
+                 "target>=5x"))
+    return rows
+
+
 SERVE_G, SERVE_N, SERVE_Q = 8, 256, 1200
 
 
@@ -561,6 +625,7 @@ TABLES = {
     "fw_fused": bench_fw_fused,
     "fw_packed": bench_fw_packed,
     "fw_repair": bench_fw_repair,
+    "fw_repair_del": bench_fw_repair_del,
     "serve_qps": bench_serve_qps,
     "fw_oocore": bench_fw_oocore,
 }
@@ -613,6 +678,12 @@ def expected_keys() -> dict[str, list[str]]:
             f"fw_repair/repair_e1[n={REPAIR_N}]",
             f"fw_repair/repair_e16[n={REPAIR_N}]",
             f"fw_repair/speedup[n={REPAIR_N}]",
+        ],
+        "fw_repair_del": [
+            f"fw_repair_del/full_resolve[n={REPAIR_N}]",
+            f"fw_repair_del/repair[n={REPAIR_N}]",
+            f"fw_repair_del/affected_fraction[n={REPAIR_N}]",
+            f"fw_repair_del/speedup[n={REPAIR_N}]",
         ],
         "serve_qps": [
             f"serve_qps/{k}[G={SERVE_G},n={SERVE_N}]"

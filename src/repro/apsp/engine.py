@@ -118,6 +118,11 @@ class EngineStats:
     repairs: int = 0         # rank-1 repair dispatches (ApspEngine.repair)
     edges_repaired: int = 0  # real (unpadded) edge updates absorbed by them
     repair_rejects: int = 0  # should_repair fast-rejects (edge worsenings)
+    repair_dels: int = 0           # decremental sweeps (ApspEngine.repair_del)
+    repair_del_rows: int = 0       # affected rows those sweeps re-relaxed
+    repair_del_noops: int = 0      # empty affected set — no sweep dispatched
+    repair_del_fallbacks: int = 0  # marked, then re-solved (cost/semiring)
+    edges_deleted: int = 0         # real deletions absorbed (sweeps + noops)
 
 
 class ApspEngine:
@@ -657,6 +662,184 @@ class ApspEngine:
             d2 = d2[None]
         return self._result(entry, d2, s2, n)
 
+    def repair_del(
+        self, dist, w, deletions, *, succ=None, threshold: float = 0.5,
+    ) -> APSPResult:
+        """Absorb a batch of edge *deletions/worsenings* into a closed
+        matrix — the structural events the rank-1 ``repair`` cannot touch.
+
+        dist: a (n, n) closure (a prior solve's output); w: the **updated**
+        weight matrix (deletions already applied — a deleted edge holds the
+        ⊕-identity, a worsened one its new weight); deletions: sequence of
+        ``(u, v, w_old)`` — endpoints plus the weight the edge carried
+        *before* the deletion (for packed or_and, the old int32 word bits);
+        succ: the matching next-hop table to repair alongside (min-plus
+        float only).
+
+        Two stages (``kernels.fw_repair_del``): mark the affected set —
+        pairs whose shortest path is witnessed through a deleted edge, via
+        the d[i,u] ⊗ w_old ⊗ d[v,j] == d[i,j] test, O(E·n²) — then
+        re-relax only the affected rows with the restricted row sweep,
+        O(T·(s + 2a)·n) traffic.  The result equals a full re-solve of w,
+        bitwise on integer-valued weights (the kernel's exactness
+        contract).  Falls back to ``self.solve(w)`` — counted in
+        ``stats.repair_del_fallbacks`` — when the affected fraction fails
+        ``plan.should_repair_del(threshold=...)`` or the semiring is
+        plus_mul (non-idempotent ⊕ sums over all paths; no restricted
+        recomputation is sound).  An *empty* affected set returns the
+        closure untouched with no sweep dispatch (``repair_del_noops``;
+        cached traces stay flat).
+
+        Mesh engines run the same LOCAL sweep: the affected strip is too
+        small to amortize a bordered round's collectives, and the
+        distributed solve is bitwise-equal to single-device anyway, so the
+        local result matches a mesh re-solve exactly.  Packed or_and
+        accepts the (1, n, n) single-word plane like ``repair``; deletions
+        are per-edge (the lanes that lost the edge are read from w itself).
+        """
+        sr = self.semiring
+        arr = _coerce(dist, sr, self.dtype)
+        wa = _coerce(w, sr, self.dtype)
+        packed_plane = "packed" in sr.name and arr.ndim == 3 and arr.shape[0] == 1
+        if packed_plane:
+            arr, wa = arr[0], wa[0]
+        if arr.ndim != 2 or arr.shape[0] != arr.shape[1]:
+            raise ValueError(
+                f"repair_del expects a (n, n) closure, got {arr.shape}"
+            )
+        if wa.shape != arr.shape:
+            raise ValueError(
+                f"weight matrix {wa.shape} does not match closure {arr.shape}"
+            )
+        n = arr.shape[-1]
+        dels = [(int(u), int(v), wi) for (u, v, wi) in deletions]
+        if succ is not None:
+            if not _is_min_plus(sr):
+                raise ValueError(
+                    "successor repair_del is min_plus only (like every "
+                    "successor path)"
+                )
+            if jnp.dtype(arr.dtype).kind != "f":
+                raise ValueError(
+                    "successor repair_del needs a float distance table "
+                    "(the strict-< relaxation is not lowered for int16)"
+                )
+            if self.method == "distributed":
+                raise ValueError(
+                    "distributed repair_del is distance-only (like the "
+                    "distributed solve)"
+                )
+        E = len(dels)
+        if E == 0:
+            self.stats.repair_del_noops += 1
+            d0 = arr[None] if packed_plane else arr
+            s0 = None if succ is None else jnp.asarray(succ, jnp.int32)
+            return APSPResult(
+                dist=d0, succ=s0, method="repair_del", semiring=sr.name,
+                block_size=self.block_size, n=n, padded_n=n,
+            )
+        if "plus_mul" in sr.name:
+            # Non-idempotent ⊕ sums over ALL paths: neither the one-witness
+            # marking nor any restricted recomputation is sound — the only
+            # correct decremental move is a full re-solve.
+            self.stats.edges_deleted += E
+            self.stats.repair_del_fallbacks += 1
+            return self.solve(w, successors=succ is not None)
+        s = self.block_size or plan.auto_block_size(n)
+        m = plan.padded_size(n, s)
+        E_pad = max(4, 1 << (E - 1).bit_length())
+        u = np.zeros(E_pad, np.int32)
+        v = np.zeros(E_pad, np.int32)
+        # Padding edges carry the ⊕-identity weight: their witness absorbs
+        # to 0̄ and can never meet a live closure entry (and the traced
+        # live-count mask drops them anyway).
+        wold = np.full(E_pad, sr.zero, jnp.dtype(arr.dtype).name)
+        for i, (ui, vi, wi) in enumerate(dels):
+            u[i], v[i] = ui, vi
+            try:
+                wold[i] = wi
+            except (ValueError, OverflowError):
+                # A non-finite old weight in an integer lowering: the edge
+                # never existed there — the ⊕-identity witness is inert,
+                # exactly right.
+                pass
+        dtype = str(jnp.dtype(arr.dtype))
+        key1 = PlanKey(
+            n_padded=m, batch=1, dtype=dtype, semiring=sr.name,
+            method="repair_del_mark", block_size=s, bk=0, batch_block=None,
+            successors=succ is not None, edges=E_pad, backend=self._backend,
+        )
+        entry1 = self._cache.get(key1)
+        if entry1 is not None:
+            self.stats.hits += 1
+        else:
+            self.stats.misses += 1
+            entry1 = self._build_repair_del_mark(key1)
+            self._cache[key1] = entry1
+        dp = _pad(jnp.asarray(arr), m, sr)
+        wp = _pad(jnp.asarray(wa), m, sr)
+        s_init = None
+        if succ is None:
+            d_init, row_mask, _cnt = entry1.runner(
+                dp, wp, u, v, wold, np.int32(E)
+            )
+        else:
+            sp = jnp.full((m, m), -1, jnp.int32)
+            sp = sp.at[:n, :n].set(jnp.asarray(succ, jnp.int32))
+            d_init, s_init, row_mask, _cnt = entry1.runner(
+                dp, sp, wp, u, v, wold, np.int32(E)
+            )
+        rows = np.flatnonzero(np.asarray(row_mask)[:n])
+        a = int(rows.size)
+        self.stats.edges_deleted += E
+        if a == 0:
+            # No shortest path was witnessed through any deleted edge: the
+            # closure (and succ) is already the updated graph's — return it
+            # untouched, no sweep dispatch, cached traces stay flat.
+            self.stats.repair_del_noops += 1
+            d0 = arr[None] if packed_plane else arr
+            s0 = None if succ is None else jnp.asarray(succ, jnp.int32)
+            return APSPResult(
+                dist=d0, succ=s0, method="repair_del", semiring=sr.name,
+                block_size=s, n=n, padded_n=m,
+            )
+        word = jnp.dtype(arr.dtype).itemsize
+        if not plan.should_repair_del(
+            n, a, block_size=s, word=word, edges=E,
+            successors=succ is not None, threshold=threshold,
+        ):
+            self.stats.repair_del_fallbacks += 1
+            return self.solve(w, successors=succ is not None)
+        a_pad = min(max(8, 1 << (a - 1).bit_length()), m)
+        rows_arr = np.full(a_pad, m, np.int32)
+        rows_arr[:a] = rows
+        key2 = PlanKey(
+            n_padded=m, batch=1, dtype=dtype, semiring=sr.name,
+            method="repair_del", block_size=s,
+            bk=min(self.bk, s), batch_block=None,
+            successors=succ is not None, edges=a_pad, backend=self._backend,
+        )
+        entry2 = self._cache.get(key2)
+        if entry2 is not None:
+            self.stats.hits += 1
+        else:
+            self.stats.misses += 1
+            entry2 = self._build_repair_del_sweep(key2)
+            self._cache[key2] = entry2
+        if succ is None:
+            d2 = entry2.runner(d_init, rows_arr)[:n, :n]
+            s2 = None
+        else:
+            d2, s2 = entry2.runner(d_init, s_init, rows_arr)
+            d2, s2 = d2[:n, :n], s2[:n, :n]
+        if self.validate and _is_min_plus(sr):
+            _check_negative_cycles(d2, False)
+        self.stats.repair_dels += 1
+        self.stats.repair_del_rows += a
+        if packed_plane:
+            d2 = d2[None]
+        return self._result(entry2, d2, s2, n)
+
     def should_repair(
         self, n: int, pending_updates: int, *,
         successors: bool = False, dtype=None, threshold: float = 0.5,
@@ -783,6 +966,93 @@ class ApspEngine:
                 idx = jnp.arange(out.shape[-1])
                 out = out.at[..., idx, idx].set(dg)
             return out
+
+        entry.runner = jax.jit(traced)
+        return entry
+
+    def _build_repair_del_mark(self, key: PlanKey) -> ExecutablePlan:
+        """Stage-1 runner: padded (closure[, succ], weights, edge batch,
+        live count) → (d_init[, s_init], affected-row mask, entry count).
+        Pure XLA on every backend — the witness test is E outer-product
+        compares, bandwidth-bound with nothing for a kernel to fuse."""
+        sr = self.semiring
+        entry = ExecutablePlan(key=key, runner=None)
+        from repro.kernels.fw_repair_del import (
+            mark_affected,
+            mark_affected_with_successors,
+        )
+
+        if key.successors:
+
+            def traced_succ(dp, sp, wp, u, v, wold, ecount):
+                entry.traces += 1
+                return mark_affected_with_successors(
+                    dp, sp, wp, u, v, wold, ecount, semiring=sr
+                )
+
+            entry.runner = jax.jit(traced_succ)
+            return entry
+
+        def traced(dp, wp, u, v, wold, ecount):
+            entry.traces += 1
+            return mark_affected(dp, wp, u, v, wold, ecount, semiring=sr)
+
+        entry.runner = jax.jit(traced)
+        return entry
+
+    def _build_repair_del_sweep(self, key: PlanKey) -> ExecutablePlan:
+        """Stage-2 runner: (d_init[, s_init], padded affected rows) → the
+        repaired closure.  key.edges carries the power-of-two affected-row
+        bucket a_pad (the strip height), the same bucketing trick the
+        rank-1 repair uses for its edge batches.  plus_mul never reaches
+        here (repair_del falls back to solve), so no diagonal lift."""
+        sr = self.semiring
+        s = key.block_size
+        interpret = self.interpret
+        word = jnp.dtype(key.dtype).itemsize
+        entry = ExecutablePlan(key=key, runner=None)
+        entry.hbm_bytes_per_round = plan.repair_del_hbm_bytes(
+            key.n_padded, s, affected_rows=key.edges, word=word,
+            successors=key.successors,
+        )
+        if key.successors:
+            # Successor sweeps run the XLA twin on every backend — next-hop
+            # tables are a host-walked serving structure (see the kernel
+            # module docstring); a Pallas variant is open headroom.
+            from repro.kernels.fw_repair_del import (
+                fw_repair_del_sweep_with_successors_ref,
+            )
+
+            def traced_succ(d_init, s_init, rows):
+                entry.traces += 1
+                return fw_repair_del_sweep_with_successors_ref(
+                    d_init, s_init, rows, block_size=s
+                )
+
+            entry.runner = jax.jit(traced_succ)
+            return entry
+
+        from repro.kernels.ops import default_interpret
+
+        use_ref = interpret is None and default_interpret()
+        if use_ref:
+            from repro.kernels.fw_repair_del import fw_repair_del_sweep_ref
+
+            fn = lambda d, r: fw_repair_del_sweep_ref(
+                d, r, block_size=s, bk=key.bk, variant=self.variant,
+                semiring=sr,
+            )
+        else:
+            from repro.kernels.fw_repair_del import fw_repair_del_sweep
+
+            fn = lambda d, r: fw_repair_del_sweep(
+                d, r, block_size=s, bk=key.bk, variant=self.variant,
+                semiring=sr, interpret=interpret,
+            )
+
+        def traced(d_init, rows):
+            entry.traces += 1
+            return fn(d_init, rows)
 
         entry.runner = jax.jit(traced)
         return entry

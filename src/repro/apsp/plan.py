@@ -361,6 +361,58 @@ def repair_hbm_bytes(
     return 2.0 * bands * s * m * word * (2 if successors else 1)
 
 
+def repair_del_hbm_bytes(
+    n: int, s: int, *, affected_rows: int, word: int = 4, edges: int = 1,
+    successors: bool = False,
+) -> float:
+    """HBM traffic of ONE decremental repair (``kernels.fw_repair_del``).
+
+    Stage 1 (marking) streams the closure once per deleted edge (the
+    witness outer-product compare) plus the updated weights and the reset
+    write — (2 + E)·n² words.  Stage 2 (the restricted row sweep) runs T
+    rounds, each reading one (s, n) pivot band and reading+writing the
+    (a, n) affected-row strip — T·(s + 2a)·n words against the full
+    round's ~2n².  Successor tracking doubles it (distance + next-hop).
+
+    The decremental crossover ``should_repair_del`` uses: at a ≪ n the
+    sweep approaches the rank-1 repair's n/s advantage; as a → n it
+    degrades past a full solve (the band assembly is pure overhead), which
+    is exactly when ``ApspEngine.repair_del`` falls back.
+    """
+    m = padded_size(n, s)
+    T = m // s
+    mark = (2.0 + edges) * m * m * word
+    sweep = T * (s + 2.0 * affected_rows) * m * word
+    return (mark + sweep) * (2 if successors else 1)
+
+
+def should_repair_del(
+    n: int, affected_rows: int, *, block_size: int | None = None,
+    word: int = 4, edges: int = 1, successors: bool = False,
+    threshold: float = 0.5,
+) -> bool:
+    """The affected-fraction policy: is the restricted sweep still cheaper
+    than a full fused re-solve once stage 1 has counted the damage?
+
+    Unlike ``ApspEngine.should_repair`` (decided *before* any dispatch from
+    the pending-update backlog), this runs *between* the two repair_del
+    stages — the affected row count only exists after marking, and marking
+    is O(E·n²), cheap enough to always run.  Compares
+    ``repair_del_hbm_bytes`` against ``threshold ×`` the full solve's
+    modeled traffic; at n=1024, s=128, f32 the crossover sits near
+    a ≈ 0.37·n affected rows.
+    """
+    if affected_rows < 1:
+        return False
+    s = block_size or auto_block_size(n)
+    cost = repair_del_hbm_bytes(
+        n, s, affected_rows=affected_rows, word=word, edges=edges,
+        successors=successors,
+    )
+    full = fused_solve_hbm_bytes(n, s, word=word) * (2 if successors else 1)
+    return cost <= threshold * full
+
+
 def achieved_hbm_gbps(
     n: int, s: int, seconds: float, *, word: int = 4, batch: int = 1
 ) -> float:

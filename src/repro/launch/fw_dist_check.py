@@ -18,6 +18,9 @@ verifies the distributed solve.  Exit code 0 on success.  Modes:
                    per-edge sweep) == single-device repair == full re-solve,
                    bitwise, per --semiring/--dtype (+ --packed lanes);
                    warm repair cache must not retrace.
+  --repair-del     distributed ApspEngine.repair_del (batched edge-deletion
+                   mark + restricted row sweep) == single-device repair_del
+                   == full re-solve, bitwise; warm cache must not retrace.
   --bench          time the per-round dispatch and measure the collective
                    bytes in the compiled per-round HLO against the SUMMA
                    model (plan.dist_round_comm_bytes /
@@ -88,6 +91,10 @@ def main() -> int:
     ap.add_argument("--repair", action="store_true",
                     help="distributed ApspEngine.repair == single-device "
                          "repair == full re-solve, bitwise")
+    ap.add_argument("--repair-del", action="store_true", dest="repair_del",
+                    help="distributed ApspEngine.repair_del (batched edge "
+                         "deletion) == single-device repair_del == full "
+                         "re-solve, bitwise")
     ap.add_argument("--packed", action="store_true",
                     help="repair mode: bit-packed or_and int32 lanes")
     ap.add_argument("--bench", action="store_true",
@@ -120,7 +127,8 @@ def main() -> int:
     dtype = jnp.dtype(args.dtype)
     R, C = plan.mesh_factorization(args.devices, args.pods)
 
-    if not args.repair:  # repair mode builds its own per-scenario inputs
+    if not (args.repair or args.repair_del):
+        # repair modes build their own per-scenario inputs
         w = jnp.asarray(_graph_for(args.semiring, args.n, seed=0), dtype)
     if args.batch > 1:
         # (--bitwise too: the naive oracle of the default mode is not
@@ -192,6 +200,88 @@ def main() -> int:
         print(f"OK repair devices={ndev} mesh={dict(mesh.shape)} n={args.n} "
               f"semiring={args.semiring} dtype={args.dtype} "
               f"packed={args.packed} edges={len(upd)}")
+        return 0
+
+    if args.repair_del:
+        # Decremental (edge-deletion) repair under a device mesh.  The
+        # distributed engine's repair_del runs the mark + restricted row
+        # sweep locally (the strip is too small to amortize collectives);
+        # what the mesh guarantees is that the *baseline closure* it starts
+        # from — the distributed solve — is bitwise-identical to the
+        # single-device one, so mesh repair_del == single-device repair_del
+        # == a full distributed re-solve of the deleted graph, bitwise.
+        from repro.launch.fw_serve import pick_deletions, repair_scenario
+
+        w0, _, baseline = repair_scenario(args.semiring, args.n)
+        w0 = np.asarray(w0, dtype)
+        kw = dict(semiring=sr, validate=False)
+        single = ApspEngine(method=baseline, **kw)
+        dist = ApspEngine(method="distributed", mesh=mesh, row_axes=row_axes,
+                          **kw)
+        r0s = single.solve(w0)
+        if args.semiring != "plus_mul":
+            # for plus_mul the baseline is method="naive" (the only closure
+            # a non-idempotent ⊕ admits) and the blocked distributed solve
+            # legitimately differs — repairs start from the baseline
+            # closure either way, exactly like the --repair mode.
+            r0d = dist.solve(w0)
+            if not np.array_equal(np.asarray(r0d.dist),
+                                  np.asarray(r0s.dist), equal_nan=True):
+                print("FAIL distributed solve != single-device solve",
+                      file=sys.stderr)
+                return 1
+        dels, w1 = pick_deletions(w0, r0s.dist, args.semiring)
+        if not dels:
+            # plus_mul: the path-sum closure rarely equals any single edge,
+            # so no on-path pick exists — any deleted edge exercises the
+            # fallback arm just as well.
+            for u_, v_ in np.argwhere(w0 != sr.zero):
+                if u_ != v_:
+                    dels = [(int(u_), int(v_), float(w0[u_, v_]))]
+                    w1 = np.array(w0, copy=True)
+                    w1[u_, v_] = sr.zero
+                    break
+        # threshold forced high: at smoke sizes a deletion touches most
+        # rows, and the byte model would (correctly) pick the re-solve arm;
+        # the parity check wants the sweep arm exercised.
+        rd = np.asarray(dist.repair_del(r0s.dist, w1, dels,
+                                        threshold=100.0).dist)
+        rs = np.asarray(single.repair_del(r0s.dist, w1, dels,
+                                          threshold=100.0).dist)
+        want = np.asarray(single.solve(w1).dist)
+        if args.semiring == "plus_mul":
+            # non-idempotent ⊕: repair_del's documented full-solve fallback
+            # re-solves with the engine's OWN method (naive baseline vs the
+            # blocked distributed solve, which legitimately differ for a
+            # path-sum ⊕) — the guarantee is repair_del == that engine's
+            # own full re-solve of the deleted graph.
+            assert dist.stats.repair_del_fallbacks >= 1, "fallback not taken"
+            if not np.array_equal(rd, np.asarray(dist.solve(w1).dist),
+                                  equal_nan=True):
+                print("FAIL distributed repair_del != distributed re-solve",
+                      file=sys.stderr)
+                return 1
+            if not np.array_equal(rs, want, equal_nan=True):
+                print("FAIL repair_del != full re-solve", file=sys.stderr)
+                return 1
+        else:
+            if not np.array_equal(rd, rs, equal_nan=True):
+                print("FAIL distributed repair_del != single-device "
+                      "repair_del", file=sys.stderr)
+                return 1
+            if not np.array_equal(rs, want, equal_nan=True):
+                print("FAIL repair_del != full re-solve", file=sys.stderr)
+                return 1
+            assert dist.stats.repair_dels >= 1, "sweep arm was not taken"
+            dist.repair_del(r0s.dist, w1, dels,
+                            threshold=100.0)  # warm: no retrace
+            traces = [e.traces for e in dist._cache.values()
+                      if e.key.method.startswith("repair_del")]
+            assert traces and all(t == 1 for t in traces), \
+                f"repair_del cache retraced: {traces}"
+        print(f"OK repair_del devices={ndev} mesh={dict(mesh.shape)} "
+              f"n={args.n} semiring={args.semiring} dtype={args.dtype} "
+              f"edges={len(dels)}")
         return 0
 
     if args.bench:

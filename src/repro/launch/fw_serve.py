@@ -17,12 +17,15 @@ and prints a ``METRICS {json}`` line ``benchmarks.run`` parses into
   * bitwise repair-vs-resolve across all five semirings + the int16 and
     bit-packed lowerings (``repair_scenario`` below builds per-semiring
     inputs satisfying the repair kernel's exactness conditions);
+  * bitwise repair_del-vs-resolve (decremental: deletions/worsenings) on
+    the same semiring × lowering grid, sweep and fallback arms both,
+    plus the serving-side ``fail_link`` → ``repair_del`` refresh route;
   * successor-table repair == re-solve on tie-free weights;
   * snapshot consistency mid-refresh (a reader's snapshot is immutable
     across a racing publish);
   * a mini load-gen pass through the scheduler;
   * BENCH_fw.json key-manifest diff for the ``serve_qps/*`` +
-    ``fw_repair/*`` ladders.
+    ``fw_repair/*`` + ``fw_repair_del/*`` ladders.
 """
 from __future__ import annotations
 
@@ -92,6 +95,35 @@ def repair_scenario(semiring: str, n: int, seed: int = 0):
     raise ValueError(f"no repair scenario for semiring {semiring!r}")
 
 
+def pick_deletions(w, dist, semiring: str, count: int = 3):
+    """Deleted-edge batch for the decremental smoke: edges lying ON
+    shortest paths (``w[u,v] == dist[u,v] ≠ 0̄``), so the affected set is
+    non-empty and ``repair_del`` actually dispatches its restricted sweep
+    (an off-path deletion is the cheap no-op exit, tested separately).
+
+    Returns (deletions, w1): the ``(u, v, w_old)`` triples
+    ``ApspEngine.repair_del`` takes, and the updated weight matrix with
+    those edges removed (set to the ⊕-identity).
+    """
+    import numpy as np
+
+    from repro.core.semiring import SEMIRINGS
+
+    sr = SEMIRINGS[semiring]
+    w = np.asarray(w)
+    d = np.asarray(dist)
+    dels: list[tuple[int, int, float]] = []
+    w1 = np.array(w, copy=True)
+    for u, v in np.argwhere((w == d) & (w != sr.zero)):
+        if u == v:
+            continue
+        dels.append((int(u), int(v), float(w[u, v])))
+        w1[u, v] = sr.zero
+        if len(dels) == count:
+            break
+    return dels, w1
+
+
 def _apply_updates(w, updates, semiring: str):
     """The updated weight matrix a full re-solve should close."""
     import numpy as np
@@ -125,6 +157,36 @@ def smoke() -> int:
             return 1
     print("smoke: repair == re-solve bitwise (5 semirings, f32)")
 
+    # 1b) decremental: repair_del == re-solve bitwise, all five semirings.
+    # Deletions are on-shortest-path edges and the threshold is forced high
+    # (at n=48 a deletion touches most rows, so the byte model would
+    # correctly prefer re-solve) so the restricted sweep actually
+    # dispatches; plus_mul routes through its documented full-solve
+    # fallback (non-idempotent ⊕) and must still be bitwise.
+    sweeps = 0
+    for name in ("min_plus", "max_plus", "max_min", "or_and", "plus_mul"):
+        w, _, baseline = repair_scenario(name, n)
+        eng = ApspEngine(method=baseline, semiring=name, validate=False)
+        r0 = eng.solve(w)
+        dels, w1 = pick_deletions(w, r0.dist, name)
+        rep = eng.repair_del(r0.dist, w1, dels, threshold=100.0)
+        r1 = eng.solve(w1)
+        if not np.array_equal(np.asarray(rep.dist), np.asarray(r1.dist),
+                              equal_nan=True):
+            print(f"FAIL repair_del != resolve for {name}", file=sys.stderr)
+            return 1
+        sweeps += eng.stats.repair_dels
+        if name == "plus_mul" and eng.stats.repair_del_fallbacks != 1:
+            print("FAIL plus_mul repair_del did not fall back",
+                  file=sys.stderr)
+            return 1
+    if sweeps < 3:
+        print(f"FAIL only {sweeps} repair_del sweeps dispatched",
+              file=sys.stderr)
+        return 1
+    print("smoke: repair_del == re-solve bitwise (5 semirings, f32, "
+          f"{sweeps} sweeps)")
+
     # 2) int16 storage lowering (dtype pins it — else ints promote to f32).
     import jax.numpy as jnp
 
@@ -146,6 +208,35 @@ def smoke() -> int:
         return 1
     print("smoke: repair == re-solve bitwise (min_plus int16)")
 
+    # 2b) decremental on the storage lowerings: int16 and bf16.
+    for dt in (jnp.int16, jnp.bfloat16):
+        wlow = rng.integers(1, 120, (n, n)).astype(np.float32)
+        wlow[rng.uniform(size=(n, n)) > 0.4] = np.inf
+        np.fill_diagonal(wlow, 0.0)
+        leng = ApspEngine(method="fused", semiring="min_plus", dtype=dt,
+                          validate=False)
+        r0 = leng.solve(wlow)
+        df = np.asarray(r0.dist).astype(np.float64)
+        dels, w1 = [], wlow.copy()
+        for u, v in np.argwhere(
+            np.isclose(wlow, df) & np.isfinite(wlow)
+        ):
+            if u != v:
+                dels.append((int(u), int(v), float(wlow[u, v])))
+                w1[u, v] = np.inf
+            if len(dels) == 3:
+                break
+        rep = leng.repair_del(r0.dist, w1, dels, threshold=100.0)
+        r1 = leng.solve(w1)
+        if not (leng.stats.repair_dels == 1 and np.array_equal(
+            np.asarray(rep.dist).astype(np.float64),
+            np.asarray(r1.dist).astype(np.float64),
+        )):
+            print(f"FAIL {jnp.dtype(dt).name} repair_del != resolve",
+                  file=sys.stderr)
+            return 1
+    print("smoke: repair_del == re-solve bitwise (min_plus int16 + bf16)")
+
     # 3) bit-packed or_and: an update (u, v, mask) adds edge u→v in the
     # graphs whose int32 bit lanes are set in ``mask``.
     rng = np.random.default_rng(9)
@@ -165,6 +256,22 @@ def smoke() -> int:
         return 1
     print("smoke: repair == re-solve bitwise (packed or_and)")
 
+    # 3b) packed word-plane deletion: clear edge 3→7 in lane 0 and edge
+    # 40→9 in every lane; the old word bits are the witness weights.
+    r0 = peng.solve(np.asarray(pack_reachability(B1.astype(np.float32))))
+    d0w = np.asarray(r0.dist)
+    B2 = B1.copy()
+    B2[0, 3, 7] = False
+    B2[:, 40, 9] = False
+    words2 = np.asarray(pack_reachability(B2.astype(np.float32)))
+    dels = [(3, 7, 1 << 0), (40, 9, 0b11)]
+    rep = peng.repair_del(r0.dist, words2, dels, threshold=100.0)
+    p2 = peng.solve(words2)
+    if not np.array_equal(np.asarray(rep.dist), np.asarray(p2.dist)):
+        print("FAIL packed repair_del != resolve", file=sys.stderr)
+        return 1
+    print("smoke: repair_del == re-solve bitwise (packed or_and lanes)")
+
     # 4) successor-table repair (tie-free weights → bitwise).
     w, upd, _ = repair_scenario("min_plus", n, seed=2)
     eng = ApspEngine(method="fused", validate=False)
@@ -177,6 +284,30 @@ def smoke() -> int:
         print("FAIL successor repair != resolve", file=sys.stderr)
         return 1
     print("smoke: successor repair == re-solve bitwise (dist AND succ)")
+
+    # 4b) successor-table decremental repair, both policy arms: a forced
+    # sweep (threshold=100.0) and a forced fallback (threshold=0.0) must
+    # each equal the re-solve bitwise — dist AND succ.
+    for thr, arm in ((100.0, "sweep"), (0.0, "fallback")):
+        w, _, _ = repair_scenario("min_plus", n, seed=4)
+        eng = ApspEngine(method="fused", validate=False)
+        r0 = eng.solve(w, successors=True)
+        dels, w1 = pick_deletions(w, r0.dist, "min_plus")
+        rep = eng.repair_del(r0.dist, w1, dels, succ=r0.succ, threshold=thr)
+        r1 = eng.solve(w1, successors=True)
+        if not (np.array_equal(np.asarray(rep.dist), np.asarray(r1.dist),
+                               equal_nan=True)
+                and np.array_equal(np.asarray(rep.succ),
+                                   np.asarray(r1.succ))):
+            print(f"FAIL successor repair_del != resolve ({arm})",
+                  file=sys.stderr)
+            return 1
+        took_sweep = eng.stats.repair_dels == 1
+        if took_sweep != (arm == "sweep"):
+            print(f"FAIL successor repair_del wrong arm ({arm})",
+                  file=sys.stderr)
+            return 1
+    print("smoke: successor repair_del == re-solve bitwise (both arms)")
 
     # 5) snapshot consistency mid-refresh + a mini scheduler pass.
     from repro.serve.routing import RoutingEngine
@@ -201,6 +332,32 @@ def smoke() -> int:
         return 1
     print("smoke: snapshots consistent mid-refresh; scheduler flushed 5-in-1")
 
+    # 5b) serving-side decremental: fail_link records the deletion and the
+    # refresh routes through repair_del (counted), published table equal to
+    # a from-scratch solve.
+    d_act = np.asarray(router.snapshots.active("g").dist)
+    wg = np.asarray(router.registry.peek("g"))
+    cand = np.argwhere(
+        np.isfinite(wg) & (wg == d_act) & ~np.eye(wg.shape[0], dtype=bool)
+    )
+    router.fail_link("g", int(cand[0][0]), int(cand[0][1]), symmetric=False)
+    if not router.registry.pending_deletions("g"):
+        print("FAIL fail_link did not record a deletion", file=sys.stderr)
+        return 1
+    router.refresh()
+    full = router.engine.solve(
+        np.asarray(router.registry.peek("g")), successors=True
+    )
+    snap = router.snapshots.active("g")
+    if not (router.repair_del_refreshes == 1
+            and np.array_equal(snap.dist, np.asarray(full.dist),
+                               equal_nan=True)
+            and np.array_equal(snap.succ, np.asarray(full.succ))):
+        print("FAIL fail_link refresh != resolve via repair_del",
+              file=sys.stderr)
+        return 1
+    print("smoke: fail_link → repair_del refresh == re-solve (dist AND succ)")
+
     # 6) BENCH_fw.json manifest diff for the serving ladders.
     repo = os.path.dirname(
         os.path.dirname(os.path.dirname(os.path.dirname(
@@ -215,8 +372,10 @@ def smoke() -> int:
 
     with open(bench) as f:
         have = set(json.load(f))
-    want = set(expected_keys()["fw_repair"]) | set(
-        expected_keys()["serve_qps"]
+    want = (
+        set(expected_keys()["fw_repair"])
+        | set(expected_keys()["fw_repair_del"])
+        | set(expected_keys()["serve_qps"])
     )
     missing = sorted(want - have)
     for k in missing:

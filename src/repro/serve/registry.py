@@ -13,10 +13,18 @@ pieces of bookkeeping the rest of ``repro.serve`` composes around:
     ⊕-improving single-edge updates since its last solve, so a refresh may
     absorb them with the O(E·n²) rank-1 repair (``ApspEngine.repair``).
     A *structurally* dirty graph saw a replacement, an edge removal, or a
-    ⊕-worsening — repair's exactness conditions are gone and only a full
-    re-solve is sound.  Any structural event clears the pending delta list:
-    deltas are relative to the last *solved* table, which the structural
-    change invalidates wholesale.
+    ⊕-worsening — repair's exactness conditions are gone.  Structural
+    events whose every change is a recorded *deletion/worsening* of a known
+    edge (``mark_deletion``) stay eligible for the decremental fast path
+    (``ApspEngine.repair_del``): the pending ``(u, v, w_old)`` list is the
+    witness batch its affected-set marking needs.  A replacement, an
+    eviction, or any unrecorded structural change clears that list — only a
+    full re-solve is sound then.  Any structural event clears the pending
+    delta list: deltas are relative to the last *solved* table, which the
+    structural change invalidates wholesale.  Symmetrically, an improvement
+    arriving *after* recorded deletions clears the deletion list: repair_del
+    re-relaxes only rows the deletions touched, which cannot absorb an
+    unrelated improvement.
   * **LRU order** — reads ``touch()`` a graph; eviction walks the
     least-recently-used end first and never evicts a dirty graph's place in
     line before its tables exist.
@@ -61,6 +69,9 @@ class GraphRegistry:
         self._dirty: dict[str, str] = {}  # gid -> DELTA | STRUCTURAL
         self._deltas: dict[str, list[EdgeUpdate]] = {}
         self._structural: dict[str, int] = {}  # gid -> worsening events
+        # gid -> recorded (u, v, w_old) deletions/worsenings; non-empty ⇒
+        # this structurally-dirty graph is still repair_del-eligible.
+        self._deletions: dict[str, list[tuple[int, int, float]]] = {}
         self.evictions = 0
 
     # ------------------------------------------------------------- weights
@@ -114,21 +125,48 @@ class GraphRegistry:
         self._dirty.pop(graph_id, None)
         self._deltas.pop(graph_id, None)
         self._structural.pop(graph_id, None)
+        self._deletions.pop(graph_id, None)
 
     def ids(self) -> list[str]:
         return list(self._graphs)
 
     # ---------------------------------------------------------------- dirty
     def mark_structural(self, graph_id: str) -> None:
-        """Replacement / removal / ⊕-worsening: full re-solve required."""
+        """Replacement / removal / unrecorded ⊕-worsening: full re-solve
+        required — also forfeits any recorded deletions (the pending list
+        no longer describes every change since the last solve)."""
         self._dirty[graph_id] = STRUCTURAL
         self._deltas.pop(graph_id, None)
+        self._deletions.pop(graph_id, None)
         self._structural[graph_id] = self._structural.get(graph_id, 0) + 1
+
+    def mark_deletion(self, graph_id: str, u: int, v: int, w_old) -> None:
+        """Record one edge deletion/worsening with the weight it carried —
+        a structural event that KEEPS decremental-repair eligibility.
+
+        Downgrades to plain ``mark_structural`` when the pending state
+        cannot be absorbed by ``ApspEngine.repair_del`` anyway: pending
+        ⊕-improvements (kind DELTA — the snapshot-relative witness test
+        would run against a closure the improvements have not reached), or
+        an earlier unrecorded structural event (replacement/eviction —
+        the recorded list would be incomplete).
+        """
+        kind = self._dirty.get(graph_id)
+        if kind == DELTA or (kind == STRUCTURAL
+                             and graph_id not in self._deletions):
+            self.mark_structural(graph_id)
+            return
+        self._dirty[graph_id] = STRUCTURAL
+        self._structural[graph_id] = self._structural.get(graph_id, 0) + 1
+        self._deletions.setdefault(graph_id, []).append((u, v, w_old))
 
     def mark_edge_delta(self, graph_id: str, u: int, v: int, w) -> None:
         """Accumulate one ⊕-improving update; stays delta-dirty unless the
-        graph is already structurally dirty (structural wins)."""
+        graph is already structurally dirty (structural wins — and an
+        improvement after recorded deletions forfeits repair_del, whose
+        sweep only re-relaxes the deletion-affected rows)."""
         if self._dirty.get(graph_id) == STRUCTURAL:
+            self._deletions.pop(graph_id, None)
             return
         self._dirty[graph_id] = DELTA
         self._deltas.setdefault(graph_id, []).append(EdgeUpdate(u, v, w))
@@ -140,6 +178,12 @@ class GraphRegistry:
     def pending_deltas(self, graph_id: str) -> list[EdgeUpdate]:
         return list(self._deltas.get(graph_id, ()))
 
+    def pending_deletions(self, graph_id: str) -> list[tuple[int, int, float]]:
+        """The recorded ``(u, v, w_old)`` deletion batch — non-empty exactly
+        when this structurally-dirty graph may refresh via
+        ``ApspEngine.repair_del`` instead of a full re-solve."""
+        return list(self._deletions.get(graph_id, ()))
+
     def structural_count(self, graph_id: str) -> int:
         """Worsening/structural events since the last solve — the count
         ``ApspEngine.should_repair(worsenings=…)`` fast-rejects on."""
@@ -149,6 +193,7 @@ class GraphRegistry:
         self._dirty.pop(graph_id, None)
         self._deltas.pop(graph_id, None)
         self._structural.pop(graph_id, None)
+        self._deletions.pop(graph_id, None)
 
     def dirty_ids(self) -> list[str]:
         """Insertion-ordered dirty set; drives refresh batching."""

@@ -124,6 +124,7 @@ class RoutingEngine:
             self._flush_batch, max_batch=max_batch, max_wait_s=max_wait_s, **kw
         )
         self.repair_refreshes = 0
+        self.repair_del_refreshes = 0
         self.solve_refreshes = 0
 
     # ------------------------------------------------------------- registry
@@ -162,16 +163,38 @@ class RoutingEngine:
     def set_edge(
         self, graph_id: str, u: int, v: int, w, *, symmetric: bool = False
     ) -> None:
-        """Force-assign an edge weight (may worsen) — structural dirty."""
+        """Force-assign an edge weight (may worsen) — structural dirty.
+
+        The assignment is classified per edge: a pure ⊕-*worsening* (a
+        removal, a min-plus weight increase, cleared or_and lanes —
+        ``old ⊕ new == old``) records the old weight with
+        ``mark_deletion``, keeping the graph eligible for the decremental
+        repair at the next refresh; anything else (an improvement, a
+        multi-plane mixed change) is plain ``mark_structural`` and will
+        re-solve.  An assignment that changes nothing stays clean.
+        """
+        sr = self.engine.semiring
         wm = np.array(self.registry.peek(graph_id), copy=True)
-        wm[..., u, v] = w
-        if symmetric:
-            wm[..., v, u] = w
-        self.registry.replace_weights(graph_id, wm)
-        self.registry.mark_structural(graph_id)
+        changed = False
+        for i, j in ((u, v), (v, u)) if symmetric else ((u, v),):
+            old = np.array(wm[..., i, j], copy=True)
+            new = np.asarray(w, wm.dtype)
+            if np.array_equal(new, old):
+                continue
+            wm[..., i, j] = new
+            changed = True
+            merged = np.asarray(sr.add(old, new))
+            if np.array_equal(merged, old) and old.size == 1:
+                self.registry.mark_deletion(graph_id, i, j, old.item())
+            else:
+                self.registry.mark_structural(graph_id)
+        if changed:
+            self.registry.replace_weights(graph_id, wm)
 
     def fail_link(self, graph_id: str, u: int, v: int, *, symmetric=True) -> None:
-        """Serving-side mutation: remove edge(s) and mark the graph dirty."""
+        """Serving-side mutation: remove edge(s) and mark the graph dirty —
+        a pure worsening, so ``set_edge`` records it as a deletion and the
+        next refresh absorbs it decrementally when the damage is small."""
         self.set_edge(graph_id, u, v, np.inf, symmetric=symmetric)
 
     def remove_graph(self, graph_id: str) -> None:
@@ -191,13 +214,17 @@ class RoutingEngine:
         """Bring dirty graphs current; returns how many were refreshed.
 
         graph_ids: restrict to these graphs (clean ones in the list are
-        skipped; None = the whole dirty set).  Structurally dirty graphs
-        re-solve in ONE bucketed ``solve_many``; edge-delta dirty graphs
+        skipped; None = the whole dirty set).  Edge-delta dirty graphs
         with a published snapshot go through ``ApspEngine.repair`` when
         ``should_repair`` says the backlog is still cheaper than a
-        re-solve.  All fresh tables stage first and publish together at
-        the end — queries racing a refresh read the old consistent
-        snapshots until the atomic swap.
+        re-solve.  Structurally dirty graphs whose every change is a
+        *recorded deletion/worsening* (``registry.pending_deletions``) go
+        through the decremental ``ApspEngine.repair_del`` — which itself
+        re-solves past the affected-fraction crossover, counted in the
+        engine's ``repair_del_fallbacks``.  Everything else re-solves in
+        ONE bucketed ``solve_many``.  All fresh tables stage first and
+        publish together at the end — queries racing a refresh read the
+        old consistent snapshots until the atomic swap.
         """
         dirty = self.registry.dirty_ids()
         if graph_ids is not None:
@@ -216,11 +243,21 @@ class RoutingEngine:
             and self.engine.semiring is MIN_PLUS
         )
         repair_ids: list[str] = []
+        repair_del_ids: list[str] = []
         solve_ids: list[str] = []
         for gid in dirty:
             snap = self.snapshots.active(gid)
             deltas = self.registry.pending_deltas(gid)
             if (
+                self.registry.dirty_kind(gid) == _registry.STRUCTURAL
+                and snap is not None
+                and self.registry.pending_deletions(gid)
+                # repair_del takes one (n, n) closure (or a single packed
+                # word plane) — multi-plane snapshots re-solve.
+                and (np.ndim(snap.dist) == 2 or snap.dist.shape[0] == 1)
+            ):
+                repair_del_ids.append(gid)
+            elif (
                 self.registry.dirty_kind(gid) == _registry.DELTA
                 and snap is not None
                 and deltas
@@ -259,6 +296,18 @@ class RoutingEngine:
                 None if res.succ is None else np.asarray(res.succ),
             )
             self.repair_refreshes += 1
+        for gid in repair_del_ids:
+            snap = self.snapshots.active(gid)
+            res = self.engine.repair_del(
+                snap.dist, self.registry.peek(gid),
+                self.registry.pending_deletions(gid), succ=snap.succ,
+                threshold=self.repair_threshold,
+            )
+            self.snapshots.stage(
+                gid, np.asarray(res.dist),
+                None if res.succ is None else np.asarray(res.succ),
+            )
+            self.repair_del_refreshes += 1
         # Atomic cutover: every staged table publishes only now, after all
         # device work finished — a reader mid-refresh saw old tables only.
         for gid in dirty:

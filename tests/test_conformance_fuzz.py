@@ -1,0 +1,210 @@
+"""Cross-lowering conformance fuzz harness (ISSUE 10, satellite).
+
+Seeded random graphs — dense, sparse, disconnected, odd (non-tile) n,
+ragged batches — are pushed through every implementation lane the solver
+offers (method × Pallas backend × semiring × storage lowering) and the
+results are compared BITWISE against the plain triple-loop oracle
+``core.fw_naive``.
+
+Why bitwise is the right bar: on integer-valued weights every lane of the
+blocked family (naive / blocked / staged / fused, ref or Triton lowering)
+evaluates the exact same ⊕/⊗ chains in the exact same float lattice —
+min/max pick, they never round — so any single-bit divergence is a real
+scheduling or indexing bug, not noise.  The two documented exceptions are
+encoded here rather than papered over:
+
+  * plus_mul (non-idempotent ⊕): only ``method="naive"`` computes the true
+    path-sum closure; the blocked family computes a different (internally
+    consistent) iteration order, so its members are fuzzed against EACH
+    OTHER, with naive-vs-oracle asserted separately.
+  * bf16/int16 storage: the oracle runs in the same lowered value domain
+    (the lowered semiring), so saturation/rounding is part of the compared
+    computation, not a tolerance.
+
+The seed is fixed by default and overridable via ``FUZZ_SEED`` — the CI
+``conformance-fuzz`` job pins it so a red run is reproducible with
+``FUZZ_SEED=<seed> pytest tests/test_conformance_fuzz.py``.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apsp import ApspEngine, solve
+from repro.core import fw_naive
+from repro.core.semiring import I16_INF, SEMIRINGS, lower_semiring
+
+SEED = int(os.environ.get("FUZZ_SEED", "20260809"))
+METHODS = ("naive", "blocked", "staged", "fused")
+IDEMPOTENT = ("min_plus", "max_plus", "max_min", "or_and")
+
+# (name, n, density, disconnected?) — odd n exercises the pad/unpad path,
+# the disconnected topology exercises ⊕-identity (no-path) propagation.
+TOPOLOGIES = (
+    ("dense", 24, 1.0, False),
+    ("sparse", 32, 0.15, False),
+    ("disconnected", 24, 0.5, True),
+    ("odd_n", 17, 0.6, False),
+)
+
+
+def _fuzz_graph(sr_name, n, density, disconnected, seed):
+    """Integer-valued random graph in the semiring's value domain."""
+    rng = np.random.default_rng(seed)
+    sr = SEMIRINGS[sr_name]
+    if sr_name == "or_and":
+        w = (rng.uniform(size=(n, n)) < density * 0.3).astype(np.float32)
+        np.fill_diagonal(w, 1.0)
+    elif sr_name == "plus_mul":
+        # small powers of two: products/sums of a few stay exactly
+        # representable, so even the path-sum closure compares bitwise
+        w = 2.0 ** rng.integers(-6, -2, (n, n)).astype(np.float32)
+    else:
+        w = rng.integers(1, 100, (n, n)).astype(np.float32)
+        w[rng.uniform(size=(n, n)) > density] = sr.zero
+        if sr_name == "max_plus":
+            # longest paths need a DAG — any positive cycle diverges, and
+            # the divergent iterate is schedule-dependent by construction
+            w[np.tril_indices(n)] = sr.zero
+        np.fill_diagonal(w, sr.one)
+    if disconnected:  # two components, no cross edges at all
+        h = n // 2
+        w[:h, h:] = sr.zero
+        w[h:, :h] = sr.zero
+        np.fill_diagonal(w, sr.one)
+    return w
+
+
+def _oracle(w, sr_name):
+    return np.asarray(fw_naive(jnp.asarray(w), semiring=SEMIRINGS[sr_name]))
+
+
+# ----------------------------------------------- method × semiring × shape
+@pytest.mark.parametrize("topo", TOPOLOGIES, ids=[t[0] for t in TOPOLOGIES])
+@pytest.mark.parametrize("sr_name", IDEMPOTENT)
+def test_fuzz_methods_vs_naive_oracle(sr_name, topo):
+    """Every method lane == the triple-loop oracle, bit for bit."""
+    name, n, density, disc = topo
+    w = _fuzz_graph(sr_name, n, density, disc, SEED)
+    want = _oracle(w, sr_name)
+    for method in METHODS:
+        got = solve(w, method=method, semiring=sr_name, block_size=8,
+                    validate=False)
+        assert np.array_equal(np.asarray(got.dist), want, equal_nan=True), \
+            f"{method} diverges from fw_naive on {sr_name}/{name}"
+
+
+@pytest.mark.parametrize("topo", TOPOLOGIES, ids=[t[0] for t in TOPOLOGIES])
+def test_fuzz_plus_mul_lanes(topo):
+    """plus_mul: naive == oracle; the blocked family agrees with itself."""
+    name, n, density, disc = topo
+    w = _fuzz_graph("plus_mul", n, density, disc, SEED + 1)
+    want = _oracle(w, "plus_mul")
+    got = solve(w, method="naive", semiring="plus_mul", validate=False)
+    assert np.array_equal(np.asarray(got.dist), want, equal_nan=True)
+    blocked_family = {
+        m: np.asarray(solve(w, method=m, semiring="plus_mul", block_size=8,
+                            validate=False).dist)
+        for m in ("blocked", "staged", "fused")
+    }
+    ref = blocked_family["blocked"]
+    for m, d in blocked_family.items():
+        assert np.array_equal(d, ref, equal_nan=True), \
+            f"plus_mul {m} != blocked on {name}"
+
+
+# --------------------------------------------------------- Pallas backends
+@pytest.mark.parametrize("sr_name", IDEMPOTENT)
+@pytest.mark.parametrize("backend", ("ref", "gpu"))
+def test_fuzz_backends_bitwise(sr_name, backend):
+    """The fused round's Triton (interpret) and ref lowerings both equal
+    the oracle — the cross-backend face of the conformance cube."""
+    w = _fuzz_graph(sr_name, 24, 0.5, False, SEED + 2)
+    want = _oracle(w, sr_name)
+    got = solve(w, method="fused", semiring=sr_name, block_size=8,
+                backend=backend, validate=False)
+    assert np.array_equal(np.asarray(got.dist), want, equal_nan=True), \
+        f"backend={backend} diverges on {sr_name}"
+
+
+# -------------------------------------------------------- storage lowerings
+def test_fuzz_int16_lowering_vs_lowered_oracle():
+    """Saturating int16: fw_naive run with the LOWERED semiring is the
+    oracle — saturation is part of the computation both sides share."""
+    rng = np.random.default_rng(SEED + 3)
+    n = 24
+    w = rng.integers(1, 900, (n, n)).astype(np.int16)
+    w[rng.uniform(size=(n, n)) > 0.5] = I16_INF
+    np.fill_diagonal(w, 0)
+    lowered = lower_semiring(SEMIRINGS["min_plus"], jnp.int16)
+    want = np.asarray(fw_naive(jnp.asarray(w), semiring=lowered))
+    for method in ("blocked", "staged", "fused"):
+        got = solve(w, method=method, semiring="min_plus", dtype=jnp.int16,
+                    block_size=8, validate=False)
+        assert np.array_equal(np.asarray(got.dist), want), method
+
+
+def test_fuzz_bf16_lowering_lanes_agree():
+    """bf16 storage: all blocked-family lanes agree bitwise (the oracle
+    comparison is method-internal — rounding must not depend on the
+    schedule), and small-integer weights round-trip exactly to f32."""
+    rng = np.random.default_rng(SEED + 4)
+    n = 24
+    w = rng.integers(1, 60, (n, n)).astype(np.float32)
+    w[rng.uniform(size=(n, n)) > 0.4] = np.inf
+    np.fill_diagonal(w, 0.0)
+    lanes = {
+        m: np.asarray(solve(w, method=m, semiring="min_plus",
+                            dtype=jnp.bfloat16, block_size=8,
+                            validate=False).dist).astype(np.float32)
+        for m in ("blocked", "staged", "fused")
+    }
+    ref = lanes["blocked"]
+    for m, d in lanes.items():
+        assert np.array_equal(d, ref, equal_nan=True), m
+    # exactness window: sums of a few small ints are bf16-representable
+    want = _oracle(w, "min_plus")
+    mask = np.isfinite(want) & (want < 128)
+    assert np.array_equal(ref[mask], want[mask])
+
+
+def test_fuzz_packed_closure_vs_per_graph_oracle():
+    """Bit-packed or_and: one packed solve == 32 independent boolean
+    closures, each bitwise equal to the per-graph oracle."""
+    rng = np.random.default_rng(SEED + 5)
+    B, n = 5, 24
+    Bs = (rng.uniform(size=(B, n, n)) < 0.08).astype(np.float32)
+    Bs[:, np.arange(n), np.arange(n)] = 1.0
+    got = solve(Bs, method="fused", semiring="or_and", packed=True,
+                block_size=8, validate=False)
+    want = np.stack([_oracle(Bs[b], "or_and") for b in range(B)])
+    assert np.array_equal(np.asarray(got.dist), want)
+
+
+# ------------------------------------------------------------ ragged batches
+def test_fuzz_ragged_batch_vs_per_graph_oracle():
+    """ApspEngine.solve_many over ragged sizes (odd ones included) ==
+    per-graph fw_naive, bitwise, for every graph in the batch."""
+    sizes = (13, 17, 24, 24, 31)
+    graphs = [
+        _fuzz_graph("min_plus", n, 0.5, False, SEED + 10 + i)
+        for i, n in enumerate(sizes)
+    ]
+    eng = ApspEngine(method="fused", validate=False)
+    results = eng.solve_many(graphs)
+    for i, (g, r) in enumerate(zip(graphs, results)):
+        assert np.array_equal(np.asarray(r.dist), _oracle(g, "min_plus"),
+                              equal_nan=True), f"graph {i} (n={g.shape[0]})"
+
+
+def test_fuzz_batched_solve_vs_per_graph_oracle():
+    """A (B, n, n) batch through one solve == B independent oracles."""
+    rng_seeds = range(SEED + 20, SEED + 23)
+    ws = np.stack([_fuzz_graph("min_plus", 24, 0.7, False, s)
+                   for s in rng_seeds])
+    got = np.asarray(solve(ws, method="fused", semiring="min_plus",
+                           block_size=8, validate=False).dist)
+    for b in range(ws.shape[0]):
+        assert np.array_equal(got[b], _oracle(ws[b], "min_plus"),
+                              equal_nan=True), f"batch lane {b}"

@@ -232,3 +232,111 @@ def test_lower_semiring_rejections():
         lower_semiring(MIN_PLUS, packed=True)  # packed is or_and-only
     with pytest.raises(ValueError):
         lower_semiring(OR_AND, jnp.int16, packed=True)  # words are int32
+
+
+# ------------------------------------ metamorphic closure properties
+# Relations the *solver* must satisfy on whole graphs, not the scalar ⊕/⊗
+# laws above: relabeling equivariance, closure idempotence, and ⊕-monotone
+# response to a single-edge improvement.  Each property is one plain
+# fixed-seed pytest case (runs everywhere) plus a hypothesis-driven fuzz
+# over seeds (skips cleanly where hypothesis is not installed — see
+# _hypothesis_compat).
+CLOSABLE = ("min_plus", "max_plus", "max_min", "or_and")
+
+
+def _metamorphic_graph(name, n, seed):
+    """Integer-weight graph with a well-defined closure (DAG for max_plus)."""
+    rng = np.random.default_rng(seed)
+    sr = SEMIRINGS[name]
+    if name == "or_and":
+        w = (rng.uniform(size=(n, n)) < 0.15).astype(np.float32)
+    else:
+        w = rng.integers(1, 100, (n, n)).astype(np.float32)
+        w[rng.uniform(size=(n, n)) > 0.5] = sr.zero
+        if name == "max_plus":  # positive cycles diverge: keep it acyclic
+            w[np.tril_indices(n)] = sr.zero
+    np.fill_diagonal(w, sr.one)
+    return w
+
+
+def _solve_dist(w, name):
+    from repro.apsp import solve
+
+    return np.asarray(
+        solve(w, method="fused", semiring=name, block_size=8,
+              validate=False).dist
+    )
+
+
+def _check_permutation_equivariance(name, seed):
+    """solve(W[π,π]) == solve(W)[π,π] — vertex labels carry no meaning, so
+    relabeling the input relabels the closure and changes nothing else."""
+    n = 20
+    w = _metamorphic_graph(name, n, seed)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    lhs = _solve_dist(w[np.ix_(perm, perm)], name)
+    rhs = _solve_dist(w, name)[np.ix_(perm, perm)]
+    assert np.array_equal(lhs, rhs, equal_nan=True), (name, seed)
+
+
+def _check_resolve_idempotence(name, seed):
+    """solve(solve(W)) == solve(W) — a closure is a fixed point of the
+    closure map (⊕-idempotent semirings only; plus_mul path-sums are not)."""
+    w = _metamorphic_graph(name, 20, seed)
+    d1 = _solve_dist(w, name)
+    d2 = _solve_dist(d1, name)
+    assert np.array_equal(d2, d1, equal_nan=True), (name, seed)
+
+
+def _check_monotone_improvement(name, seed):
+    """Improving one edge (⊕-absorbing its old weight) moves every pair
+    toward the ⊕-preferred direction or not at all — never away."""
+    sr = SEMIRINGS[name]
+    w = _metamorphic_graph(name, 20, seed)
+    d0 = _solve_dist(w, name)
+    rng = np.random.default_rng(seed + 2)
+    u, v = rng.integers(0, 20, 2)
+    while u == v:
+        v = rng.integers(0, 20)
+    w1 = w.copy()
+    w1[u, v] = sr.one if name in ("or_and", "max_min") else (
+        -5.0 if name == "min_plus" else 1e6
+    )
+    w1[u, v] = np.float32(sr.add(np.float32(w1[u, v]), np.float32(w[u, v])))
+    d1 = _solve_dist(w1, name)
+    # d1 ⊕ d0 == d1: the new closure absorbs the old one pointwise.
+    absorbed = np.asarray(sr.add(jnp.asarray(d1), jnp.asarray(d0)))
+    assert np.array_equal(absorbed, d1, equal_nan=True), (name, seed)
+
+
+@pytest.mark.parametrize("name", CLOSABLE)
+def test_metamorphic_permutation_equivariance(name):
+    _check_permutation_equivariance(name, 7)
+
+
+@pytest.mark.parametrize("name", CLOSABLE)
+def test_metamorphic_resolve_idempotence(name):
+    _check_resolve_idempotence(name, 11)
+
+
+@pytest.mark.parametrize("name", CLOSABLE)
+def test_metamorphic_monotone_improvement(name):
+    _check_monotone_improvement(name, 13)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(list(CLOSABLE)))
+def test_property_permutation_equivariance(seed, name):
+    _check_permutation_equivariance(name, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(list(CLOSABLE)))
+def test_property_resolve_idempotence(seed, name):
+    _check_resolve_idempotence(name, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), name=st.sampled_from(list(CLOSABLE)))
+def test_property_monotone_improvement(seed, name):
+    _check_monotone_improvement(name, seed)

@@ -228,13 +228,16 @@ def test_update_edge_routes_through_repair():
     assert router.engine.stats.solves == solves + 2  # check-solve + refresh
 
 
-def test_worsening_takes_resolve_fallback_not_repair():
-    """Regression (ISSUE 8 satellite): a worsened edge must refresh through
-    a full re-solve — never the rank-1 repair — and the stats must show the
-    fallback was taken.  The registry counts worsening events per graph
-    (``structural_count``) and refresh feeds them into
-    ``should_repair(worsenings=…)``, so the fast-reject holds even if a
-    classification bug ever left such a graph delta-dirty."""
+def test_worsening_takes_decremental_path_not_rank1_repair():
+    """Regression (ISSUE 8 satellite, updated by ISSUE 10): a worsened edge
+    must never refresh through the rank-1 repair — its exactness conditions
+    are gone.  It now refreshes through the *decremental* path instead of a
+    blind full re-solve: ``set_edge`` records the (u, v, w_old) deletion,
+    refresh routes the structurally-dirty graph to ``ApspEngine.repair_del``
+    (``repair_del_refreshes``), and the published table still equals a
+    from-scratch solve bitwise.  The ``should_repair(worsenings=…)``
+    fast-reject belt stays, guarding the rank-1 path against any future
+    classification bug."""
     rng = np.random.default_rng(5)
     n = 48
     w = rng.integers(1, 10**6, (n, n)).astype(np.float32)
@@ -245,18 +248,27 @@ def test_worsening_takes_resolve_fallback_not_repair():
     router.add_graph("g", w)
     router.refresh()
     repairs = router.repair_refreshes
-    solves = router.solve_refreshes
+    u, v = map(int, np.argwhere(np.isfinite(w) & ~np.eye(n, dtype=bool))[0])
 
-    router.fail_link("g", 3, 7)  # removal = worsening = structural
+    router.fail_link("g", u, v)  # removal = worsening = structural
     assert router.registry.dirty_kind("g") == STRUCTURAL
-    assert router.registry.structural_count("g") == 1
+    assert router.registry.structural_count("g") >= 1
+    assert router.registry.pending_deletions("g")
     router.refresh()
-    assert router.repair_refreshes == repairs      # repair NOT taken
-    assert router.solve_refreshes == solves + 1    # re-solve fallback taken
+    assert router.repair_refreshes == repairs      # rank-1 repair NOT taken
+    assert router.repair_del_refreshes == 1        # decremental path taken
     assert router.registry.structural_count("g") == 0  # cleared with dirty
+    assert not router.registry.pending_deletions("g")
 
-    # The belt itself: with worsenings pending, the policy says no even for
-    # a backlog it would otherwise happily repair.
+    # The published table is a real closure of the updated weights.
+    w1 = np.asarray(router.registry.peek("g"))
+    ref = router.engine.solve(w1, successors=True)
+    snap = router.snapshots.active("g")
+    assert np.array_equal(snap.dist, np.asarray(ref.dist), equal_nan=True)
+    assert np.array_equal(snap.succ, np.asarray(ref.succ))
+
+    # The belt itself: with worsenings pending, the rank-1 policy says no
+    # even for a backlog it would otherwise happily repair.
     assert not router.engine.should_repair(n, 1, worsenings=1)
     assert router.engine.stats.repair_rejects >= 1
 
